@@ -1,0 +1,123 @@
+"""Paper Fig. 4: Accessor roofline — performance vs arithmetic intensity.
+
+The paper's synthetic benchmark streams 2^28 values through the Accessor
+and varies the number of arithmetic ops per loaded value, plotting achieved
+GFLOP/s per storage format.  Without an H100 we reproduce the figure two
+ways:
+
+1. **analytic v5e model** — achieved rate = min(peak_compute,
+   AI_effective · BW) where each format's bytes/value rescales the
+   arithmetic intensity; decompression ops consume compute-slack exactly as
+   the paper's Sec. I budget (46 spare ops/value) describes;
+2. **measured CPU wall-time** (sanity): the same sweep executed with the
+   jnp codec on this container's CPU, reported as relative speedups only.
+
+Output: one row per (format × intensity): bytes/value, effective AI,
+modelled GB/s and GFLOP/s, fraction of the bandwidth roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frsz2 as F
+from repro.roofline.analysis import HW_V5E
+
+FORMATS = {
+    "float32": dict(bytes_per_value=4.0, decomp_ops=0),
+    "bfloat16": dict(bytes_per_value=2.0, decomp_ops=1),
+    "frsz2_32": dict(bytes_per_value=(128 * 32 + 8) / 128 / 8, decomp_ops=8),
+    "frsz2_16": dict(bytes_per_value=(128 * 16 + 8) / 128 / 8, decomp_ops=8),
+    "frsz2_8": dict(bytes_per_value=(128 * 8 + 8) / 128 / 8, decomp_ops=8),
+}
+
+INTENSITIES = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+
+
+def model_rows(hw=HW_V5E):
+    """Analytic roofline per format/intensity (flops are f32 VPU ops)."""
+    peak = hw["peak_flops"] / 2      # f32 VPU rate ~ half bf16 MXU peak
+    bw = hw["hbm_bw"]
+    rows = []
+    for name, f in FORMATS.items():
+        for ai in INTENSITIES:
+            # useful flops per value = ai; decompression ops ride along on
+            # the VPU and only matter once compute-bound
+            total_ops = ai + f["decomp_ops"]
+            t_mem = f["bytes_per_value"] / bw
+            t_cmp = total_ops / peak
+            t = max(t_mem, t_cmp)
+            rows.append(dict(
+                format=name, intensity=ai,
+                bytes_per_value=round(f["bytes_per_value"], 3),
+                gflops=ai / t / 1e9,
+                gbps=f["bytes_per_value"] / t / 1e9,
+                bound="memory" if t_mem >= t_cmp else "compute",
+                bw_fraction=round(min(t_mem / t, 1.0), 4),
+            ))
+    return rows
+
+
+def measured_rows(n=1 << 22, reps=3):
+    """CPU sanity sweep: relative read-path cost of each storage format."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    stores = {
+        "float32": x,
+        "bfloat16": x.astype(jnp.bfloat16),
+        "frsz2_16": F.compress(x, F.FrszSpec(bs=128, l=16,
+                                             dtype=jnp.float32)),
+        "frsz2_32": F.compress(x, F.FrszSpec(bs=128, l=32,
+                                             dtype=jnp.float32)),
+    }
+
+    def read(s):
+        if isinstance(s, F.BlockCompressed):
+            return F.decompress(s)
+        return s.astype(jnp.float32)
+
+    @jax.jit
+    def work(s):
+        v = read(s)
+        return jnp.sum(v * 1.0001 + 0.5)
+
+    rows = []
+    for name, s in stores.items():
+        work(s).block_until_ready()
+        t0 = time.time()
+        for _ in range(reps):
+            work(s).block_until_ready()
+        dt = (time.time() - t0) / reps
+        rows.append(dict(format=name, n=n, cpu_ms=round(dt * 1e3, 2)))
+    base = next(r for r in rows if r["format"] == "float32")["cpu_ms"]
+    for r in rows:
+        r["rel_time"] = round(r["cpu_ms"] / base, 2)
+    return rows
+
+
+def run(verbose=True):
+    rows = model_rows()
+    meas = measured_rows()
+    if verbose:
+        print("== Fig. 4 (modelled, v5e) ==")
+        print(f"{'format':10s} {'bytes/val':>9s} {'AI=4 GFLOP/s':>12s} "
+              f"{'AI=64 GFLOP/s':>13s}")
+        for name in FORMATS:
+            r4 = next(r for r in rows
+                      if r["format"] == name and r["intensity"] == 4)
+            r64 = next(r for r in rows
+                       if r["format"] == name and r["intensity"] == 64)
+            print(f"{name:10s} {r4['bytes_per_value']:9.3f} "
+                  f"{r4['gflops']:12.1f} {r64['gflops']:13.1f}")
+        print("== CPU read-path sanity ==")
+        for r in meas:
+            print(f"  {r['format']:10s} {r['cpu_ms']:8.2f} ms "
+                  f"(x{r['rel_time']})")
+    return dict(model=rows, measured=meas)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Figs. 5 & 6: residual-norm development per storage format /
+emulated compressor on the atmosmod-like problem.
+
+Runs CB-GMRES with every storage format and with the SZ/SZ3/ZFP error
+emulators (paper Sec. V-D methodology: compress+decompress through the
+interface, accounting footprint analytically) and records the implicit
+residual estimate per iteration.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.emulators import emulator_by_name
+from repro.solver import gmres
+from repro.sparse import make_problem, rhs_for
+
+FORMATS = ["float64", "float32", "float16", "frsz2_32", "frsz2_21",
+           "frsz2_16"]
+EMULATORS = ["sz_abs:1e-6", "sz_abs:1e-8", "sz_pwrel:1e-4", "zfp_fr:16",
+             "zfp_fr:32"]
+
+
+def run(n=4000, m=50, max_iters=4000, verbose=True, with_emulators=True):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    A, target = make_problem("synth:atmosmod", n)
+    b, _ = rhs_for(A)
+    out = {}
+    names = list(FORMATS) + (
+        [f"emul:{e}" for e in EMULATORS] if with_emulators else [])
+    for name in names:
+        storage = (emulator_by_name(name[5:]) if name.startswith("emul:")
+                   else name)
+        res = gmres(A, b, storage=storage, m=m, max_iters=max_iters,
+                    target_rrn=target)
+        out[name] = dict(
+            iters=res.iterations, converged=bool(res.converged),
+            final_rrn=res.rrn,
+            history=[float(v) for v in res.rrn_history[:: max(
+                1, len(res.rrn_history) // 200)]],
+        )
+        if verbose:
+            print(f"{name:16s} iters={res.iterations:6d} "
+                  f"rrn={res.rrn:.3e} conv={res.converged}")
+    if verbose:
+        f64 = out["float64"]["iters"]
+        print("\niterations relative to float64 (paper Fig. 8 style):")
+        for name in names:
+            r = out[name]
+            rel = r["iters"] / f64 if r["converged"] else 0.0
+            print(f"  {name:16s} {rel:5.2f}x"
+                  + ("" if r["converged"] else "  (did not converge)"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Figs. 7 & 8: final RRN + iteration ratios over the problem suite.
+
+For every synthetic CFD problem and storage format: does it reach the
+target RRN, and at how many iterations relative to float64 storage?
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.solver import gmres
+from repro.sparse import PROBLEMS, make_problem, rhs_for
+
+FORMATS = ["float64", "float32", "float16", "frsz2_32", "frsz2_16"]
+
+
+def run(n=4000, m=50, max_iters=6000, verbose=True):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    rows = []
+    for pname in PROBLEMS:
+        A, target = make_problem(pname, n)
+        b, _ = rhs_for(A)
+        base_iters = None
+        for fmt in FORMATS:
+            res = gmres(A, b, storage=fmt, m=m, max_iters=max_iters,
+                        target_rrn=target)
+            if fmt == "float64":
+                base_iters = res.iterations
+            rows.append(dict(
+                problem=pname, format=fmt, target=target,
+                achieved=res.rrn, converged=bool(res.converged),
+                iters=res.iterations,
+                rel_iters=(res.iterations / base_iters
+                           if res.converged and base_iters else 0.0),
+            ))
+    if verbose:
+        print(f"{'problem':18s} {'format':9s} {'achieved':>10s} "
+              f"{'target':>9s} {'iters':>6s} {'rel':>6s}")
+        for r in rows:
+            mark = "" if r["converged"] else "  ** no convergence **"
+            print(f"{r['problem']:18s} {r['format']:9s} "
+                  f"{r['achieved']:10.2e} {r['target']:9.1e} "
+                  f"{r['iters']:6d} {r['rel_iters']:6.2f}{mark}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""LM-cell roofline table: renders EXPERIMENTS.md §Roofline from the dry-run
+JSONL artifacts (results/dryrun_full.jsonl + probes/fixup files).
+
+Also computes the decode-cell FRSZ2 win: the memory-floor delta between
+bf16 and frsz2_16 KV caches (the paper's bandwidth saving transplanted to
+serving).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+from repro.models.config import SHAPES as _SHAPES
+from repro.roofline.analytic import bytes_model
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load_rows():
+    rows = {}
+    for fname in ("dryrun_full.jsonl", "dryrun_fixup.jsonl",
+                  "probes.jsonl"):
+        path = os.path.join(RESULTS, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                key = (r.get("arch"), r.get("shape"), r.get("mesh", ""),
+                       bool(r.get("probe")), r.get("kv_format", ""))
+                if r.get("status") == "ok":
+                    rows[key] = r
+                elif key not in rows:
+                    rows[key] = r
+    return rows
+
+
+def decode_format_deltas(verbose=True):
+    """Analytic §Perf table: decode memory floor, bf16 vs frsz2 caches."""
+    import dataclasses
+    out = []
+    for aname, cfg in sorted(ARCHS.items()):
+        shape = _SHAPES["decode_32k"]
+        if cfg.family == "ssm":
+            continue
+        row = dict(arch=aname)
+        for fmt in ("bf16", "frsz2_16", "frsz2_8"):
+            c = dataclasses.replace(cfg, kv_format=fmt)
+            row[fmt] = bytes_model(c, shape, chips=256, tp=16)
+        row["win_16"] = row["bf16"] / row["frsz2_16"]
+        row["win_8"] = row["bf16"] / row["frsz2_8"]
+        out.append(row)
+        if verbose:
+            print(f"{aname:24s} bf16={row['bf16']/1e9:6.2f}GB/dev "
+                  f"frsz2_16={row['frsz2_16']/1e9:6.2f} "
+                  f"(x{row['win_16']:.2f})  "
+                  f"frsz2_8={row['frsz2_8']/1e9:6.2f} (x{row['win_8']:.2f})")
+    return out
+
+
+def run(verbose=True):
+    rows = load_rows()
+    full = [r for (a, s, mesh, probe, kv), r in rows.items()
+            if not probe and r.get("status") == "ok"]
+    probes = [r for (a, s, mesh, probe, kv), r in rows.items()
+              if probe and r.get("status") == "ok"]
+    skips = [r for r in rows.values() if r.get("status") == "skip"]
+    fails = [r for r in rows.values() if r.get("status") == "fail"]
+    if verbose:
+        print(f"dry-run rows: {len(full)} compiled ok, {len(skips)} "
+              f"documented skips, {len(fails)} stale failures, "
+              f"{len(probes)} probe rows")
+        if probes:
+            print(f"\n{'arch':24s}{'shape':13s}{'dom':11s}"
+                  f"{'t_cmp(ms)':>10s}{'t_mem(ms)':>10s}{'t_coll(ms)':>11s}"
+                  f"{'step_frac':>10s}")
+            for r in sorted(probes, key=lambda r: (r['arch'], r['shape'])):
+                print(f"{r['arch']:24s}{r['shape']:13s}{r['dominant']:11s}"
+                      f"{r['t_compute']*1e3:10.2f}"
+                      f"{r.get('t_memory_floor', 0)*1e3:10.2f}"
+                      f"{r['t_collective']*1e3:11.2f}"
+                      f"{r.get('step_roofline_fraction', 0):10.2%}")
+        print("\n== decode-cache FRSZ2 memory-floor win (paper technique) ==")
+    decode_format_deltas(verbose=verbose)
+    return dict(full=len(full), probes=len(probes), skips=len(skips),
+                fails=len(fails))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Benchmark entry point: one harness per paper table/figure.
+
+  python -m benchmarks.run [--quick] [--only NAME]
+
+| paper artifact                | harness                       |
+|-------------------------------|-------------------------------|
+| Fig. 4  Accessor roofline     | benchmarks.accessor_roofline  |
+| Fig. 5/6 convergence curves   | benchmarks.convergence_curves |
+| Fig. 7/8 RRN + iteration table| benchmarks.iteration_table    |
+| Fig. 11 end-to-end speedup    | benchmarks.speedup_model      |
+| Eq. 3   storage accounting    | benchmarks.storage_table      |
+| LM cells roofline (§Roofline) | benchmarks.lm_roofline        |
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problem sizes / fewer formats")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        accessor_roofline,
+        convergence_curves,
+        iteration_table,
+        lm_roofline,
+        speedup_model,
+        storage_table,
+    )
+
+    n = 1500 if args.quick else 4000
+    suites = {
+        "storage_table": lambda: storage_table.run(),
+        "accessor_roofline": lambda: accessor_roofline.run(),
+        "convergence_curves": lambda: convergence_curves.run(
+            n=n, max_iters=1500 if args.quick else 4000,
+            with_emulators=not args.quick),
+        "iteration_table": lambda: iteration_table.run(
+            n=n, max_iters=2000 if args.quick else 6000),
+        "speedup_model": lambda: speedup_model.run(
+            n=n, max_iters=2000 if args.quick else 6000),
+        "lm_roofline": lambda: lm_roofline.run(),
+    }
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name}] done in {time.time() - t0:.1f}s")
+        except Exception as e:  # pragma: no cover
+            import traceback
+            traceback.print_exc()
+            failed.append((name, str(e)))
+    if failed:
+        print("\nFAILED suites:", failed)
+        return 1
+    print("\nall benchmark suites completed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

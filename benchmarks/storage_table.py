@@ -1,0 +1,35 @@
+"""Paper Eq. 3: exact storage accounting per format / block size / l."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import frsz2 as F
+
+
+def run(n=1_270_432, verbose=True):          # atmosmodd size
+    rows = []
+    for bs, l, dt in [(32, 32, jnp.float64), (32, 21, jnp.float64),
+                      (32, 16, jnp.float64), (128, 32, jnp.float32),
+                      (128, 16, jnp.float32), (128, 8, jnp.float32)]:
+        spec = F.FrszSpec(bs=bs, l=l, dtype=dt)
+        rows.append(dict(
+            format=f"frsz2_{l}(bs={bs})",
+            bytes=F.storage_nbytes(n, spec),
+            bits_per_value=F.bits_per_value(spec),
+            ratio_vs_f64=8 * n / F.storage_nbytes(n, spec),
+        ))
+    for name, b in [("float64", 8), ("float32", 4), ("float16", 2)]:
+        rows.append(dict(format=name, bytes=n * b, bits_per_value=8 * b,
+                         ratio_vs_f64=8.0 / b))
+    if verbose:
+        print(f"n = {n} values")
+        print(f"{'format':20s} {'bytes':>12s} {'bits/val':>9s} "
+              f"{'ratio':>6s}")
+        for r in rows:
+            print(f"{r['format']:20s} {r['bytes']:12d} "
+                  f"{r['bits_per_value']:9.2f} {r['ratio_vs_f64']:6.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

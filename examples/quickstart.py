@@ -1,0 +1,44 @@
+"""Quickstart: the FRSZ2 codec, the Accessor, and CB-GMRES in 60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import FRSZ2_16, FrszSpec, compress, decompress, bits_per_value
+from repro.solver import gmres
+from repro.sparse import make_problem, rhs_for
+
+# --- 1. the codec -----------------------------------------------------------
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal(4096), jnp.float32)
+
+bc = compress(x, FRSZ2_16)                  # 16-bit codes, BS=128 blocks
+y = decompress(bc)
+print(f"frsz2_16: {bits_per_value(FRSZ2_16):.2f} bits/value, "
+      f"max rel err {float(jnp.max(jnp.abs(y - x)) / jnp.max(jnp.abs(x))):.2e}")
+
+# the paper's exact format: BS=32 (CUDA warp), l=32, f64 values
+paper_spec = FrszSpec(bs=32, l=32, dtype=jnp.float64)
+x64 = jnp.asarray(rng.standard_normal(4096))
+y64 = decompress(compress(x64, paper_spec))
+print(f"frsz2_32(f64): {bits_per_value(paper_spec):.0f} bits/value, "
+      f"max rel err {float(jnp.max(jnp.abs(y64 - x64))):.2e}")
+
+# --- 2. CB-GMRES with a compressed Krylov basis ------------------------------
+A, target_rrn = make_problem("synth:atmosmod", 4000)
+b, x_sol = rhs_for(A)
+print(f"\nsolving synth:atmosmod n={A.shape[0]} nnz={A.nnz} "
+      f"target rrn={target_rrn:.1e}")
+
+for fmt in ["float64", "float32", "frsz2_32"]:
+    res = gmres(A, b, storage=fmt, m=50, max_iters=3000,
+                target_rrn=target_rrn)
+    print(f"  storage={fmt:9s} iterations={res.iterations:4d} "
+          f"rrn={res.rrn:.2e} converged={res.converged}")
+
+print("\nfrsz2_32 storage matches float32's footprint but converges in "
+      "fewer iterations — the paper's headline result.")

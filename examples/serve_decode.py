@@ -1,0 +1,46 @@
+"""Serve a small model with batched requests over a compressed KV cache,
+comparing kv formats (the paper's technique on the serving path).
+
+  PYTHONPATH=src python examples/serve_decode.py --requests 8
+"""
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.serve import ServeConfig, serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    base = get_arch("yi-9b").reduced()
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, base.vocab_size, 32).astype(np.int32)
+            for _ in range(args.requests)]
+    sc = ServeConfig(slots=4, prompt_len=32, max_new=args.max_new,
+                     max_ctx=96)
+
+    outs = {}
+    for fmt in ("none", "bf16", "frsz2_16"):
+        cfg = dataclasses.replace(base, kv_format=fmt)
+        t0 = time.time()
+        outs[fmt] = serve(cfg, sc, reqs, verbose=False)
+        print(f"kv={fmt:9s} {time.time()-t0:6.1f}s "
+              f"first completion: {outs[fmt][0][:8]}")
+
+    # compressed-cache generations agree with the exact cache for a while
+    # (greedy decoding; divergence after many steps is expected and fine)
+    agree16 = sum(a == b for a, b in zip(outs["none"][0],
+                                         outs["frsz2_16"][0]))
+    print(f"\nfrsz2_16 matches exact-cache greedy tokens for "
+          f"{agree16}/{len(outs['none'][0])} steps of request 0")
+
+
+if __name__ == "__main__":
+    main()

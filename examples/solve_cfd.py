@@ -1,0 +1,30 @@
+"""End-to-end CB-GMRES study over the synthetic CFD suite (paper Sec. VI).
+
+Reproduces the paper's experiment grid: every problem x every storage
+format, reporting convergence, iteration ratios, and the modelled
+end-to-end speedup (measured iterations x bandwidth cost model).
+
+  PYTHONPATH=src python examples/solve_cfd.py [--n 4000]
+"""
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    args = ap.parse_args()
+
+    from benchmarks import iteration_table, speedup_model
+
+    print("== Fig. 7/8: convergence per problem x format ==")
+    iteration_table.run(n=args.n)
+    print("\n== Fig. 11: modelled end-to-end speedup ==")
+    speedup_model.run(n=args.n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Atomic keep-k async checkpointing with elastic-mesh restore."""
+from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore, save

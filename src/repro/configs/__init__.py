@@ -1,0 +1,2 @@
+"""Per-architecture configs (assigned pool) + the paper's solver setups."""
+from repro.configs.registry import ARCHS, SHAPES, arch_names, cells, get_arch

@@ -1,0 +1,241 @@
+"""Accessor: storage format ⊥ arithmetic format (Ginkgo's interface, in JAX).
+
+The paper integrates FRSZ2 into CB-GMRES through Ginkgo's *Accessor*: all
+arithmetic happens in a high-precision "arithmetic format" while the Krylov
+basis is persisted in a "storage format" (f64/f32/f16 cast, or FRSZ2 codes).
+Reads decompress on the fly; writes compress whole blocks.
+
+This module reproduces that contract for JAX.  A :class:`BasisAccessor`
+manages a *row basis* ``V`` of fixed capacity ``(m, n)`` — the Krylov buffer —
+and exposes exactly the operations CB-GMRES needs (paper Fig. 1):
+
+  * ``write_row(store, j, v)``   — append/overwrite basis vector j (compress)
+  * ``read_row(store, j)``       — random access decompress of one row
+  * ``dots(store, w)``           — ``V @ w``      (orthogonalization, step 4)
+  * ``combine(store, h)``        — ``h @ V``      (update / solution, steps 4+17)
+
+``dots``/``combine`` are the two memory-bound hot loops; for FRSZ2 storage
+they dispatch to the fused decompress-dot Pallas kernels
+(``repro.kernels.frsz2_dot``) so codes are expanded in-register.  All
+arithmetic is performed in ``arith_dtype`` regardless of storage.
+
+Storage formats are small frozen dataclasses so they can be static args to
+jit and live inside pytree aux data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frsz2 as F
+
+__all__ = [
+    "NativeFormat",
+    "FrszFormat",
+    "BasisAccessor",
+    "format_by_name",
+    "FORMATS",
+]
+
+
+# ---------------------------------------------------------------------------
+# Storage formats
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NativeFormat:
+    """Plain cast-to-dtype storage (CB-GMRES float64/float32/float16 modes)."""
+
+    dtype: Any = jnp.float32
+
+    @property
+    def name(self) -> str:
+        return jnp.dtype(self.dtype).name
+
+    def bits_per_value(self) -> float:
+        return jnp.dtype(self.dtype).itemsize * 8
+
+    # -- whole-array codec ---------------------------------------------------
+    def empty(self, m: int, n: int):
+        return jnp.zeros((m, n), self.dtype)
+
+    def write_row(self, store, j, v):
+        return store.at[j].set(v.astype(self.dtype))
+
+    def read_row(self, store, j, arith_dtype):
+        return store[j].astype(arith_dtype)
+
+    def read_all(self, store, arith_dtype):
+        return store.astype(arith_dtype)
+
+    def nbytes(self, m: int, n: int) -> int:
+        return m * n * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class FrszFormat:
+    """FRSZ2 block-compressed storage (the paper's contribution).
+
+    ``use_kernels`` routes ``dots``/``combine`` through the fused Pallas
+    decompress-dot kernels (interpret-mode on CPU); otherwise the pure-jnp
+    codec is used.  Semantics are identical (tests assert this).
+    """
+
+    spec: F.FrszSpec = F.FRSZ2_32
+    use_kernels: bool = False
+
+    @property
+    def name(self) -> str:
+        return f"frsz2_{self.spec.l}"
+
+    def bits_per_value(self) -> float:
+        return F.bits_per_value(self.spec)
+
+    def _nb(self, n: int) -> int:
+        return -(-n // self.spec.bs)
+
+    def empty(self, m: int, n: int):
+        spec = self.spec
+        nb = self._nb(n)
+        if spec.aligned:
+            codes = jnp.zeros((m, nb, spec.bs), F._code_dtype(spec.l))
+        else:
+            codes = jnp.zeros((m, nb, spec.words_per_block), jnp.uint32)
+        exps = jnp.zeros((m, nb), spec.exp_dtype)
+        return {"codes": codes, "exps": exps}
+
+    def write_row(self, store, j, v):
+        bc = F.compress(v.astype(self.spec.dtype), self.spec)
+        return {
+            "codes": store["codes"].at[j].set(bc.codes),
+            "exps": store["exps"].at[j].set(bc.exps),
+        }
+
+    def _as_bc(self, store, n: int) -> F.BlockCompressed:
+        return F.BlockCompressed(
+            codes=store["codes"], exps=store["exps"], n=n, spec=self.spec
+        )
+
+    def read_row(self, store, j, arith_dtype, n=None):
+        spec = self.spec
+        nbs = store["codes"].shape[-2] * spec.bs
+        bc = F.BlockCompressed(
+            codes=store["codes"][j][None], exps=store["exps"][j][None],
+            n=nbs if n is None else n, spec=spec,
+        )
+        return F.decompress(bc)[0].astype(arith_dtype)
+
+    def read_all(self, store, arith_dtype, n=None):
+        spec = self.spec
+        nbs = store["codes"].shape[-2] * spec.bs
+        bc = F.BlockCompressed(
+            codes=store["codes"], exps=store["exps"],
+            n=nbs if n is None else n, spec=spec,
+        )
+        return F.decompress(bc).astype(arith_dtype)
+
+    def nbytes(self, m: int, n: int) -> int:
+        return m * F.storage_nbytes(n, self.spec)
+
+
+# ---------------------------------------------------------------------------
+# Basis accessor: the Krylov-buffer contract
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BasisAccessor:
+    """Fixed-capacity row basis V (m, n) in an arbitrary storage format.
+
+    All four operations are jit-compatible (store is a pytree; j may be a
+    traced index).  ``dots``/``combine`` accept a row mask so a growing
+    Krylov basis can live in a fixed buffer under ``lax.fori_loop``.
+    """
+
+    fmt: Any
+    m: int
+    n: int
+    arith_dtype: Any = jnp.float64
+
+    def empty(self):
+        return self.fmt.empty(self.m, self.n)
+
+    def write_row(self, store, j, v):
+        return self.fmt.write_row(store, j, v)
+
+    def read_row(self, store, j):
+        if isinstance(self.fmt, FrszFormat):
+            return self.fmt.read_row(store, j, self.arith_dtype, self.n)
+        return self.fmt.read_row(store, j, self.arith_dtype)
+
+    def read_all(self, store):
+        if isinstance(self.fmt, FrszFormat):
+            return self.fmt.read_all(store, self.arith_dtype, self.n)
+        return self.fmt.read_all(store, self.arith_dtype)
+
+    # -- hot loops ------------------------------------------------------------
+    def dots(self, store, w, row_mask=None):
+        """h = V @ w, masked rows zeroed.  (Orthogonalization dot products.)"""
+        if isinstance(self.fmt, FrszFormat) and self.fmt.use_kernels:
+            from repro.kernels import ops as kops
+
+            bc = self.fmt._as_bc(store, self.n)
+            h = kops.matvec(bc, w.astype(self.fmt.spec.dtype)).astype(self.arith_dtype)
+        else:
+            V = self.read_all(store)
+            h = V @ w.astype(self.arith_dtype)
+        if row_mask is not None:
+            h = jnp.where(row_mask, h, 0.0)
+        return h
+
+    def combine(self, store, h, row_mask=None):
+        """y = h @ V, masked rows excluded.  (Basis update / solution build.)"""
+        if row_mask is not None:
+            h = jnp.where(row_mask, h, 0.0)
+        if isinstance(self.fmt, FrszFormat) and self.fmt.use_kernels:
+            from repro.kernels import ops as kops
+
+            bc = self.fmt._as_bc(store, self.n)
+            return kops.rmatvec(bc, h.astype(self.fmt.spec.dtype)).astype(
+                self.arith_dtype
+            )
+        V = self.read_all(store)
+        return h.astype(self.arith_dtype) @ V
+
+    def nbytes(self) -> int:
+        return self.fmt.nbytes(self.m, self.n)
+
+
+# ---------------------------------------------------------------------------
+# Registry (benchmarks / CLI select formats by name)
+# ---------------------------------------------------------------------------
+
+
+def _f(dtype):
+    return NativeFormat(dtype=dtype)
+
+
+FORMATS = {
+    "float64": _f(jnp.float64),
+    "float32": _f(jnp.float32),
+    "float16": _f(jnp.float16),
+    "bfloat16": _f(jnp.bfloat16),
+}
+
+
+def format_by_name(name: str, *, arith_dtype=jnp.float64, bs: int = 32,
+                   use_kernels: bool = False, rounding: str = "truncate"):
+    """Resolve 'float64' / 'float32' / 'float16' / 'bfloat16' / 'frsz2_XX'."""
+    if name in FORMATS:
+        return FORMATS[name]
+    if name.startswith("frsz2_"):
+        l = int(name.split("_")[1])
+        spec = F.FrszSpec(bs=bs, l=l, dtype=arith_dtype, rounding=rounding)
+        return FrszFormat(spec=spec, use_kernels=use_kernels)
+    raise ValueError(f"unknown storage format {name!r}")

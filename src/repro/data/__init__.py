@@ -1,0 +1,2 @@
+"""Deterministic, host-sharded synthetic token pipeline."""
+from repro.data.pipeline import GlobalBatchSpec, synthetic_tokens

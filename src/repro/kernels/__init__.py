@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the FRSZ2 compression hot paths.
+
+Modules:
+  frsz2_kernel  - compress / decompress (VMEM-tiled, 128-lane blocks)
+  frsz2_dot     - fused decompress + matvec (CB-GMRES orthogonalization)
+  decode_attn   - flash-decode attention over a compressed KV cache
+  ops           - public wrappers (padding, layout, interpret dispatch)
+  ref           - pure-jnp oracles for all of the above
+"""

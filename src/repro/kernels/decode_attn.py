@@ -1,0 +1,105 @@
+"""Flash-decode attention over an FRSZ2-compressed KV cache (Pallas TPU).
+
+This is the paper's CB-GMRES pattern transplanted to LM serving: the KV cache
+is written once per generated token and *re-read in full* on every subsequent
+step — the exact "write once, stream many times" profile of the Krylov basis.
+Storing K/V as FRSZ2 codes (bs = head_dim = 128 -> one block per (position,
+kv-head), produced whole at append time, so the paper's "compress full blocks
+only" rule holds by construction) cuts the decode-step HBM traffic by the
+compression ratio, and decompression happens in-register between the VMEM
+load and the MXU dot.
+
+Kernel: online-softmax accumulation over KV tiles (grid reduction), GQA-aware
+(G query heads share one KV head), with per-sequence valid-length masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core import frsz2 as F
+from repro.kernels.frsz2_dot import _decode_tile
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(len_ref, q_ref, kc_ref, ke_ref, vc_ref, ve_ref,
+                        o_ref, acc_ref, m_ref, l_ref, *,
+                        spec: F.FrszSpec, sm_scale: float, bs_s: int):
+    s = pl.program_id(2)
+    num_s = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, D)
+    k = _decode_tile(kc_ref[0, 0], ke_ref[0, 0], spec)        # (bs_s, D)
+    v = _decode_tile(vc_ref[0, 0], ve_ref[0, 0], spec)        # (bs_s, D)
+
+    logits = jnp.dot(q, k.T.astype(jnp.float32),
+                     preferred_element_type=jnp.float32) * sm_scale  # (G, bs_s)
+
+    length = len_ref[0, 0]
+    pos = s * bs_s + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid = pos < length
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)          # (G, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(logits - m_new), 0.0)       # (G, bs_s)
+    l_new = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s == num_s - 1)
+    def _fini():
+        l_fin = l_ref[...]
+        safe = jnp.where(l_fin > 0.0, l_fin, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def decode_attn(q, kcodes, kexps, vcodes, vexps, lengths, spec: F.FrszSpec,
+                *, sm_scale: float | None = None, bs_s: int = 512,
+                interpret: bool = False):
+    """q (B, Hkv, G, D); k/v codes (B, Hkv, S, D) + exps (B, Hkv, S, nbd);
+    lengths (B, 1) int32.  Returns (B, Hkv, G, D).
+    """
+    B, Hkv, G, D = q.shape
+    S = kcodes.shape[2]
+    nbd = kexps.shape[-1]
+    assert S % bs_s == 0, (S, bs_s)
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    grid = (B, Hkv, S // bs_s)
+    return pl.pallas_call(
+        functools.partial(_decode_attn_kernel, spec=spec,
+                          sm_scale=sm_scale, bs_s=bs_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),              # lengths
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),  # q
+            pl.BlockSpec((1, 1, bs_s, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs_s, nbd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs_s, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs_s, nbd), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, kcodes, kexps, vcodes, vexps)

@@ -1,0 +1,114 @@
+"""Fused decompress + matvec Pallas kernels.
+
+These are the CB-GMRES hot loops (paper Fig. 1, steps 4 and 5): the Krylov
+basis ``V`` (m rows of length n, FRSZ2-compressed) is *read* twice per
+iteration — once for the dots ``h = V w`` and once for the update
+``w -= V^T h``.  Fusing decompression into the matvec is the TPU analogue of
+the paper's Accessor read path: codes go HBM -> VMEM -> VREG, are expanded
+in-register, and feed the MXU without an uncompressed HBM round-trip.
+
+Layouts (wrappers in ops.py produce them):
+  codes: (m, n)  one aligned code per element (uint8/16/32)
+  exps:  (m, n // bs) int32
+  x:     (n, 1)   /   h: (1, m)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import frsz2 as F
+from repro.core.frsz2 import _decode_block
+
+LANES = 128
+
+
+def _decode_tile(c_tile, e_tile, spec: F.FrszSpec):
+    """(bm, bn) codes + (bm, bn/bs) exps -> (bm, bn) values."""
+    e_lanes = jnp.repeat(e_tile, spec.bs, axis=1) if spec.bs > 1 else e_tile
+    return _decode_block(c_tile[..., None], e_lanes, spec)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# y (m,) = decompress(V) @ x (n,)
+# ---------------------------------------------------------------------------
+
+
+def _matvec_kernel(c_ref, e_ref, x_ref, o_ref, *, spec: F.FrszSpec):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = _decode_tile(c_ref[...], e_ref[...], spec)
+    o_ref[...] += jnp.dot(
+        vals, x_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matvec_2d(codes, exps, x, spec: F.FrszSpec, *, bm: int = 8, bn: int = 2048,
+              interpret: bool = False):
+    """codes (m, n), exps (m, n/bs), x (n, 1) -> y (m, 1)."""
+    m, n = codes.shape
+    eb = bn // spec.bs
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_matvec_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, k: (i, k)),
+            pl.BlockSpec((bm, eb), lambda i, k: (i, k)),
+            pl.BlockSpec((bn, 1), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), spec.dtype),
+        interpret=interpret,
+    )(codes, exps, x)
+
+
+# ---------------------------------------------------------------------------
+# y (n,) = h (m,) @ decompress(V)
+# ---------------------------------------------------------------------------
+
+
+def _rmatvec_kernel(c_ref, e_ref, h_ref, o_ref, *, spec: F.FrszSpec):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = _decode_tile(c_ref[...], e_ref[...], spec)
+    o_ref[...] += jnp.dot(
+        h_ref[...], vals, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def rmatvec_2d(codes, exps, h, spec: F.FrszSpec, *, bm: int = 8, bn: int = 2048,
+               interpret: bool = False):
+    """codes (m, n), exps (m, n/bs), h (1, m) -> y (1, n).
+
+    Grid iterates n-tiles in the *outer* loop and m-tiles inner, so each
+    output tile is finalized once (the m reduction is innermost).
+    """
+    m, n = codes.shape
+    eb = bn // spec.bs
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        functools.partial(_rmatvec_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, k: (k, j)),
+            pl.BlockSpec((bm, eb), lambda j, k: (k, j)),
+            pl.BlockSpec((1, bm), lambda j, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), spec.dtype),
+        interpret=interpret,
+    )(codes, exps, h)

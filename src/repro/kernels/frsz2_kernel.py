@@ -1,0 +1,126 @@
+"""Pallas TPU kernels for FRSZ2 compress / decompress.
+
+TPU adaptation of the paper's CUDA design (Sec. IV-C):
+
+* the CUDA warp (32 threads, warp-shuffle ``e_max`` reduce) becomes the
+  128-lane VREG row: with ``bs == 128`` the block's ``e_max`` is a lane-wise
+  ``max`` of a single register row — the cheapest possible reduction;
+* ``__clz`` becomes ``jax.lax.clz`` (a JAX primitive, vectorized on the VPU);
+* codes and exponents live in *separate* arrays (paper optimization (5)):
+  index arithmetic stays trivial and every memory stream is contiguous;
+* only aligned code widths l in {8, 16, 32} have kernels (paper
+  optimization (3): separate routines for l == 2^x; on TPU the unaligned
+  widths are strictly worse because vector loads want lane alignment —
+  the pure-jnp codec still supports them for fidelity studies).
+
+Layout convention for all kernels: codes are presented as a 2-D array of
+shape (M, 128) — ``M = nb * bs / 128`` rows of 128 lanes — and exponents as
+(M, G) where ``G = 128 / bs`` exponents cover one row (G >= 1; for
+bs > 128 a single exponent covers R = bs/128 consecutive rows).
+Wrappers in ``ops.py`` do the reshaping / padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import frsz2 as F
+from repro.core.frsz2 import _decode_block, _encode_block, _split_ieee
+
+LANES = 128
+
+
+def _expand_exps_row(e_tile: jax.Array, bs: int) -> jax.Array:
+    """(R, G) block exponents -> (R, 128) per-lane exponents."""
+    R, G = e_tile.shape
+    if G == 1:
+        return jnp.broadcast_to(e_tile, (R, LANES))
+    return jnp.repeat(e_tile, bs, axis=1)
+
+
+def _collapse_exps_row(e_lanes: jax.Array, bs: int) -> jax.Array:
+    """(R, 128) per-lane exponents -> (R, G) block maxima."""
+    R = e_lanes.shape[0]
+    if bs >= LANES:
+        return e_lanes.max(axis=1, keepdims=True)
+    G = LANES // bs
+    return e_lanes.reshape(R, G, bs).max(axis=2)
+
+
+# ---------------------------------------------------------------------------
+# decompress
+# ---------------------------------------------------------------------------
+
+
+def _decompress_kernel(c_ref, e_ref, o_ref, *, spec: F.FrszSpec):
+    c = c_ref[...]
+    e = _expand_exps_row(e_ref[...], spec.bs)
+    # _decode_block consumes emax of shape c.shape[:-1] and broadcasts the
+    # trailing axis itself; here exponents are already per-lane, so feed it
+    # lane-shaped data with a fake trailing axis.
+    out = _decode_block(c[..., None], e, spec)[..., 0]
+    o_ref[...] = out
+
+
+def decompress_2d(codes2d: jax.Array, exps2d: jax.Array, spec: F.FrszSpec,
+                  *, block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """codes2d: (M, 128) aligned codes; exps2d: (M, G).  Returns (M, 128) f32."""
+    M = codes2d.shape[0]
+    G = exps2d.shape[1]
+    assert M % block_rows == 0, (M, block_rows)
+    grid = (M // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_decompress_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, G), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, LANES), spec.dtype),
+        interpret=interpret,
+    )(codes2d, exps2d)
+
+
+# ---------------------------------------------------------------------------
+# compress
+# ---------------------------------------------------------------------------
+
+
+def _compress_kernel(x_ref, c_ref, e_ref, *, spec: F.FrszSpec):
+    # bs <= 128 only: the block max never crosses a VREG row (ops.py enforces)
+    x = x_ref[...]
+    sign, e, sig = _split_ieee(x, spec)
+    emax = _collapse_exps_row(e, spec.bs)  # (R, G), stays in the uint dtype
+    emax_lanes = _expand_exps_row(emax, spec.bs)  # (R, 128)
+    c = _encode_block(sign[..., None], e[..., None], sig[..., None],
+                      emax_lanes, spec)[..., 0]
+    c_ref[...] = c.astype(c_ref.dtype)
+    e_ref[...] = emax.astype(e_ref.dtype)
+
+
+def compress_2d(x2d: jax.Array, spec: F.FrszSpec, *, block_rows: int = 256,
+                interpret: bool = False):
+    """x2d: (M, 128) values.  Returns codes (M, 128), exps (M, G)."""
+    M = x2d.shape[0]
+    assert M % block_rows == 0, (M, block_rows)
+    G = max(1, LANES // spec.bs)
+    grid = (M // block_rows,)
+    code_dt = F._code_dtype(spec.l)
+    return pl.pallas_call(
+        functools.partial(_compress_kernel, spec=spec),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, G), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, LANES), code_dt),
+            jax.ShapeDtypeStruct((M, G), spec.exp_dtype),
+        ],
+        interpret=interpret,
+    )(x2d)

@@ -1,0 +1,204 @@
+"""Public, jit-friendly wrappers around the Pallas FRSZ2 kernels.
+
+Handles layout/padding so callers can use logical shapes; dispatches to the
+pure-jnp reference on CPU-hostile cases.  ``interpret`` defaults to True on
+CPU backends (the container validates kernels in interpret mode; on real TPU
+hardware set ``repro.kernels.ops.INTERPRET = False`` or pass explicitly).
+
+Kernel-path constraints (TPU alignment, see frsz2_kernel.py docstring):
+  * aligned code widths only: l in {8, 16, 32}
+  * bs divides 128 (a block never straddles a VREG row)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frsz2 as F
+from repro.kernels import frsz2_kernel as K
+from repro.kernels import frsz2_dot as KD
+from repro.kernels import decode_attn as KA
+
+LANES = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def kernel_supported(spec: F.FrszSpec) -> bool:
+    return spec.aligned and spec.l <= 32 and LANES % spec.bs == 0
+
+
+def _pick_block_rows(M: int, cap: int = 256) -> int:
+    for br in (cap, 128, 64, 32, 16, 8, 4, 2, 1):
+        if br <= cap and M % br == 0:
+            return br
+    return 1
+
+
+def _pad_rows(a: jax.Array, mult: int, axis: int = 0):
+    n = a.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return a, n
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths), n
+
+
+# ---------------------------------------------------------------------------
+# compress / decompress with logical (batch..., n) shapes
+# ---------------------------------------------------------------------------
+
+
+def compress(x: jax.Array, spec: F.FrszSpec, *, interpret: bool | None = None
+             ) -> F.BlockCompressed:
+    """Kernel-backed version of ``repro.core.frsz2.compress``."""
+    if not kernel_supported(spec):
+        return F.compress(x, spec)
+    if interpret is None:
+        interpret = _default_interpret()
+    *batch, n = x.shape
+    nb = -(-n // spec.bs)
+    n_pad = nb * spec.bs
+    total = int(np.prod(batch, dtype=np.int64)) * n_pad if batch else n_pad
+    if total % LANES != 0:
+        return F.compress(x, spec)  # too ragged for the 128-lane layout
+    xp = jnp.pad(x, [(0, 0)] * len(batch) + [(0, n_pad - n)]) if n_pad != n else x
+    x2d = xp.reshape(-1, LANES).astype(spec.dtype)
+    x2d, M = _pad_rows(x2d, 8)
+    br = _pick_block_rows(x2d.shape[0])
+    codes2d, exps2d = K.compress_2d(x2d, spec, block_rows=br, interpret=interpret)
+    codes = codes2d[:M].reshape(*batch, nb, spec.bs)
+    exps = exps2d[:M].reshape(*batch, nb)
+    return F.BlockCompressed(codes=codes, exps=exps, n=n, spec=spec)
+
+
+def decompress(bc: F.BlockCompressed, *, interpret: bool | None = None) -> jax.Array:
+    """Kernel-backed version of ``repro.core.frsz2.decompress``."""
+    spec = bc.spec
+    if not kernel_supported(spec):
+        return F.decompress(bc)
+    if interpret is None:
+        interpret = _default_interpret()
+    *batch, nb, bs = bc.codes.shape
+    total = int(np.prod(batch, dtype=np.int64)) * nb * bs if batch else nb * bs
+    if total % LANES != 0:
+        return F.decompress(bc)
+    G = LANES // spec.bs
+    codes2d = bc.codes.reshape(-1, LANES)
+    exps2d = bc.exps.reshape(-1, G)
+    codes2d, M = _pad_rows(codes2d, 8)
+    exps2d, _ = _pad_rows(exps2d, 8)
+    br = _pick_block_rows(codes2d.shape[0])
+    x2d = K.decompress_2d(codes2d, exps2d, spec, block_rows=br, interpret=interpret)
+    x = x2d[:M].reshape(*batch, nb * bs)
+    return x[..., : bc.n]
+
+
+# ---------------------------------------------------------------------------
+# fused decompress-matvec over a compressed row basis V (m, n)
+# ---------------------------------------------------------------------------
+
+
+def _basis_2d(bc: F.BlockCompressed):
+    """(m, nb, bs) codes -> (m, n_pad) element codes + (m, nb) exps."""
+    m, nb, bs = bc.codes.shape
+    return bc.codes.reshape(m, nb * bs), bc.exps, nb * bs
+
+
+def matvec(bc: F.BlockCompressed, x: jax.Array, *, bn: int = 2048,
+           interpret: bool | None = None) -> jax.Array:
+    """y = decompress(V) @ x  for V (m, n) compressed row-wise."""
+    spec = bc.spec
+    if not kernel_supported(spec):
+        V = F.decompress(bc)
+        return V @ x.astype(V.dtype)
+    if interpret is None:
+        interpret = _default_interpret()
+    codes, exps, n_pad = _basis_2d(bc)
+    xp = jnp.pad(x.astype(spec.dtype), (0, n_pad - bc.n)) if n_pad != bc.n else x.astype(spec.dtype)
+    bn_eff = min(bn, n_pad)
+    while n_pad % bn_eff:
+        bn_eff //= 2
+    bn_eff = max(bn_eff, spec.bs)
+    if n_pad % bn_eff or bn_eff % LANES:
+        V = F.decompress(bc)
+        return V @ x.astype(V.dtype)
+    codes, m = _pad_rows(codes, 8)
+    exps, _ = _pad_rows(exps, 8)
+    y = KD.matvec_2d(codes, exps, xp[:, None], spec, bm=8, bn=bn_eff,
+                     interpret=interpret)
+    return y[:m, 0]
+
+
+def rmatvec(bc: F.BlockCompressed, h: jax.Array, *, bn: int = 2048,
+            interpret: bool | None = None) -> jax.Array:
+    """y = h @ decompress(V)  for V (m, n) compressed row-wise."""
+    spec = bc.spec
+    if not kernel_supported(spec):
+        V = F.decompress(bc)
+        return h.astype(V.dtype) @ V
+    if interpret is None:
+        interpret = _default_interpret()
+    codes, exps, n_pad = _basis_2d(bc)
+    bn_eff = min(2048, n_pad)
+    while n_pad % bn_eff:
+        bn_eff //= 2
+    bn_eff = max(bn_eff, spec.bs)
+    if n_pad % bn_eff or bn_eff % LANES:
+        V = F.decompress(bc)
+        return h.astype(V.dtype) @ V
+    codes, m = _pad_rows(codes, 8)
+    exps, _ = _pad_rows(exps, 8)
+    hp = jnp.pad(h.astype(spec.dtype), (0, codes.shape[0] - m))
+    y = KD.rmatvec_2d(codes, exps, hp[None, :], spec, bm=8, bn=bn_eff,
+                      interpret=interpret)
+    return y[0, : bc.n]
+
+
+# ---------------------------------------------------------------------------
+# decode attention over compressed KV
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q: jax.Array, k_bc: F.BlockCompressed,
+                     v_bc: F.BlockCompressed, lengths: jax.Array, *,
+                     sm_scale: float | None = None, bs_s: int | None = None,
+                     interpret: bool | None = None) -> jax.Array:
+    """q (B, H, D); k/v compressed caches with logical shape (B, Hkv, S, D).
+
+    Returns (B, H, D).  Requires D == spec.bs * nbd with aligned spec.
+    """
+    spec = k_bc.spec
+    B, H, D = q.shape
+    _, Hkv, S, nbd = k_bc.exps.shape
+    G = H // Hkv
+    if interpret is None:
+        interpret = _default_interpret()
+    if not kernel_supported(spec):
+        from repro.kernels import ref
+        return ref.decode_attn_ref(
+            q, k_bc.codes.reshape(B, Hkv, S, -1), k_bc.exps,
+            v_bc.codes.reshape(B, Hkv, S, -1), v_bc.exps,
+            lengths.reshape(-1), spec, sm_scale=sm_scale)
+    kcodes = k_bc.codes.reshape(B, Hkv, S, D)
+    vcodes = v_bc.codes.reshape(B, Hkv, S, D)
+    if bs_s is None:
+        bs_s = 512
+        while S % bs_s:
+            bs_s //= 2
+    qg = q.reshape(B, Hkv, G, D)
+    # pad G to the f32 sublane count (8) for TPU tiling
+    Gp = max(8, G)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    out = KA.decode_attn(qg, kcodes, k_bc.exps, vcodes, v_bc.exps,
+                         lengths.reshape(B, 1).astype(jnp.int32), spec,
+                         sm_scale=sm_scale, bs_s=bs_s, interpret=interpret)
+    return out[:, :, :G, :].reshape(B, H, D)

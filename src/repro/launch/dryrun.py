@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell,
+``jax.jit(step, in_shardings=..., out_shardings=...).lower(*specs).compile()``
+must succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.
+Prints memory_analysis (fits-per-chip proof) and cost_analysis / collective
+roofline terms (EXPERIMENTS.md §Dry-run + §Roofline read this output).
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-20b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+The 512 placeholder host devices exist ONLY here (this module sets
+XLA_FLAGS before importing jax, as its first statement); tests and
+benchmarks see the real single CPU device.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.roofline.analysis import analyze_compiled, model_flops_for
+
+GiB = 1 << 30
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, kv_format: str | None = None,
+             extra_tags: str = "") -> dict:
+    cfg = get_arch(arch)
+    if kv_format:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_format=kv_format)
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape):
+        return dict(arch=arch, shape=shape_name, status="skip",
+                    reason="full-attention arch: long_500k unsupported "
+                           "(DESIGN.md §5)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh)
+    with mesh:
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    rep = analyze_compiled(compiled,
+                           model_flops_global=model_flops_for(cfg, shape),
+                           chips=chips)
+    per_dev_gib = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                   + mem.output_size_in_bytes
+                   - mem.alias_size_in_bytes) / GiB
+    row = dict(
+        arch=arch, shape=shape_name, status="ok",
+        mesh="x".join(str(s) for s in mesh.devices.shape),
+        chips=chips, kind=cell.meta["kind"],
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        arg_gib=round(mem.argument_size_in_bytes / GiB, 3),
+        temp_gib=round(mem.temp_size_in_bytes / GiB, 3),
+        out_gib=round(mem.output_size_in_bytes / GiB, 3),
+        alias_gib=round(mem.alias_size_in_bytes / GiB, 3),
+        per_dev_gib=round(per_dev_gib, 3),
+        flops_per_dev=rep.flops,
+        bytes_per_dev=rep.bytes_hbm,
+        coll_bytes_per_dev=rep.bytes_coll,
+        coll_by_op=rep.coll_by_op,
+        t_compute=rep.t_compute, t_memory=rep.t_memory,
+        t_collective=rep.t_collective,
+        dominant=rep.dominant, useful_flops_ratio=round(rep.useful_ratio, 4),
+        model_flops_per_dev=rep.model_flops,
+        tags=extra_tags,
+    )
+    if verbose:
+        print(f"[{arch} x {shape_name} @ {row['mesh']}] "
+              f"{row['kind']} lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"  memory/device: args={row['arg_gib']}GiB "
+              f"temp={row['temp_gib']}GiB out={row['out_gib']}GiB "
+              f"(aliased {row['alias_gib']}GiB) -> {row['per_dev_gib']}GiB")
+        print(f"  flops/dev={rep.flops:.3e} bytes/dev={rep.bytes_hbm:.3e} "
+              f"coll/dev={rep.bytes_coll:.3e} {rep.coll_by_op}")
+        print(f"  roofline: compute={rep.t_compute*1e3:.2f}ms "
+              f"memory={rep.t_memory*1e3:.2f}ms "
+              f"collective={rep.t_collective*1e3:.2f}ms "
+              f"-> dominant={rep.dominant} useful={rep.useful_ratio:.2%}")
+    return row
+
+
+def _mesh_from(spec: str | None, multi_pod: bool = False):
+    if not spec:
+        return make_production_mesh(multi_pod=multi_pod)
+    dims = [int(x) for x in spec.split("x")]
+    axes = ("pod", "data", "model")[-len(dims):]
+    import jax as _jax
+    return _jax.make_mesh(tuple(dims), axes)
+
+
+def run_probes(arch: str, shape_name: str, *, kv_format: str | None = None,
+               verbose: bool = True, mesh_spec: str | None = None,
+               cfg_overrides: dict | None = None) -> dict:
+    """Exact roofline via unrolled probe compiles (see roofline/probe.py).
+
+    Probes run on the single-pod production mesh (§Roofline is single-pod).
+    """
+    import dataclasses
+
+    from repro.launch.specs import build_cell as _bc
+    from repro.roofline.analysis import collective_bytes
+    from repro.roofline.probe import extrapolate, probe_plan
+
+    cfg = get_arch(arch)
+    if kv_format:
+        cfg = dataclasses.replace(cfg, kv_format=kv_format)
+    if cfg_overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape):
+        return dict(arch=arch, shape=shape_name, status="skip")
+    mesh = _mesh_from(mesh_spec)
+    probes = {}
+    mb_real = 0
+    for tag, pcfg in probe_plan(cfg, shape):
+        t0 = time.time()
+        cell = build_cell(pcfg, shape, mesh)
+        with mesh:
+            compiled = jax.jit(
+                cell.step_fn, in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate).lower(*cell.args).compile()
+        ca = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        probes[tag] = dict(
+            flops=float(ca.get("flops", 0.0)),
+            bytes=float(ca.get("bytes accessed", 0.0)),
+            coll=float(sum(coll.values())),
+            coll_by_op={k: float(v) for k, v in coll.items() if v},
+        )
+        if verbose:
+            print(f"  probe {tag:7s} ({time.time()-t0:5.1f}s): "
+                  f"flops={probes[tag]['flops']:.3e} "
+                  f"bytes={probes[tag]['bytes']:.3e} "
+                  f"coll={probes[tag]['coll']:.3e}")
+        if tag == "u1_m1" and shape.kind == "train":
+            # real microbatch factor chosen the same way build_cell does
+            real_cell = build_cell(cfg, shape, mesh)
+            mb_real = real_cell.meta["microbatch"]
+    rep = extrapolate(cfg, shape, probes, chips=mesh.size, mb_real=mb_real,
+                      tp=mesh.shape["model"])
+    row = dict(
+        arch=arch, shape=shape_name, status="ok", kind=shape.kind,
+        mesh="x".join(str(s_) for s_ in mesh.devices.shape),
+        chips=mesh.size, probe=True,
+        kv_format=kv_format or cfg.kv_format,
+        flops_per_dev=rep.flops, bytes_per_dev=rep.bytes_hbm,
+        bytes_model_per_dev=rep.bytes_model,
+        coll_bytes_per_dev=rep.bytes_coll, coll_by_op=rep.coll_by_op,
+        t_compute=rep.t_compute, t_memory=rep.t_memory,
+        t_memory_floor=rep.t_memory_floor,
+        t_collective=rep.t_collective, dominant=rep.dominant,
+        useful_flops_ratio=round(rep.useful_ratio, 4),
+        model_flops_per_dev=rep.model_flops,
+        roofline_fraction=round(rep.roofline_fraction, 4),
+        step_roofline_fraction=round(rep.step_roofline_fraction, 4),
+        mb_real=mb_real,
+    )
+    if verbose:
+        print(f"[probe {arch} x {shape_name}] flops/dev={rep.flops:.3e} "
+              f"bytes/dev={rep.bytes_hbm:.3e} (floor {rep.bytes_model:.3e}) "
+              f"coll/dev={rep.bytes_coll:.3e}")
+        print(f"  roofline: compute={rep.t_compute*1e3:.3f}ms "
+              f"memory={rep.t_memory_floor*1e3:.3f}ms"
+              f" (hlo {rep.t_memory*1e3:.3f}ms) "
+              f"collective={rep.t_collective*1e3:.3f}ms -> "
+              f"dominant={rep.dominant} useful={rep.useful_ratio:.2%} "
+              f"step_frac={rep.step_roofline_fraction:.2%}")
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--kv-format", default=None,
+                    help="override cfg.kv_format (e.g. bf16 vs frsz2_16)")
+    ap.add_argument("--json", default=None, help="append JSONL rows here")
+    ap.add_argument("--probes", action="store_true",
+                    help="run unrolled cost probes instead of full compiles")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all) required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    rows, failed = [], []
+    for arch, shp in cells:
+        for mp in meshes:
+            try:
+                if args.probes:
+                    if mp:
+                        continue           # §Roofline is single-pod only
+                    row = run_probes(arch, shp, kv_format=args.kv_format)
+                else:
+                    row = run_cell(arch, shp, multi_pod=mp,
+                                   kv_format=args.kv_format)
+            except Exception as e:
+                traceback.print_exc()
+                row = dict(arch=arch, shape=shp, status="fail",
+                           multi_pod=mp, probe=args.probes,
+                           error=f"{type(e).__name__}: {e}")
+                failed.append(row)
+            rows.append(row)
+            if args.json:
+                with open(args.json, "a") as f:
+                    f.write(json.dumps(row) + "\n")
+    ok = sum(r["status"] == "ok" for r in rows)
+    skip = sum(r["status"] == "skip" for r in rows)
+    print(f"\n== dry-run: {ok} ok, {skip} documented-skip, "
+          f"{len(failed)} failed ==")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

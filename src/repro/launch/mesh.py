@@ -1,0 +1,27 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh.
+
+    Single pod: 256 chips as (data=16, model=16).
+    Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16); the 'pod'
+    axis carries data parallelism over the slowest links (and the
+    FRSZ2-compressed gradient all-reduce, launch/train.py).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2, *, pod: int = 0):
+    """Small mesh over however many (CPU) devices the test process has."""
+    if pod:
+        return jax.make_mesh((pod, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,64 @@
+"""Solver driver: the paper's experiment — CB-GMRES with FRSZ2 storage.
+
+  python -m repro.launch.solve --problem synth:atmosmod --n 8000 \
+      --formats float64,float32,frsz2_32,float16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.solver import gmres
+from repro.sparse import make_problem, rhs_for
+
+
+def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
+                max_iters: int = 20000, target_rrn: float | None = None,
+                verbose: bool = True):
+    jax.config.update("jax_enable_x64", True)
+    A, rrn = make_problem(problem, n)
+    if target_rrn is not None:
+        rrn = target_rrn
+    b, x_sol = rhs_for(A)
+    rows = []
+    for fmt in formats:
+        t0 = time.time()
+        res = gmres(A, b, storage=fmt, m=m, max_iters=max_iters,
+                    target_rrn=rrn)
+        err = float(jnp.linalg.norm(res.x - x_sol)
+                    / jnp.linalg.norm(x_sol))
+        rows.append(dict(problem=problem, n=A.shape[0], format=fmt,
+                         iters=res.iterations, rrn=res.rrn,
+                         converged=bool(res.converged), x_err=err,
+                         restarts=res.restarts, wall_s=time.time() - t0))
+        if verbose:
+            r = rows[-1]
+            print(f"{problem:18s} {fmt:10s} iters={r['iters']:6d} "
+                  f"rrn={r['rrn']:.3e} conv={r['converged']} "
+                  f"t={r['wall_s']:.1f}s")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--problem", default="synth:atmosmod")
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--formats",
+                    default="float64,float32,frsz2_32,float16")
+    ap.add_argument("--m", type=int, default=100)
+    ap.add_argument("--target-rrn", type=float, default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    rows = solve_suite(args.problem, args.n, args.formats.split(","),
+                       m=args.m, target_rrn=args.target_rrn)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

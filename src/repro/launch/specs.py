@@ -1,0 +1,219 @@
+"""ShapeDtypeStruct input stand-ins + sharded step builders per cell.
+
+``input_specs(arch, shape)`` produces exactly the abstract arrays each
+step function consumes — weak-type-correct, shardable, zero allocation —
+so ``jax.jit(step).lower(**specs).compile()`` exercises the full
+(architecture x input-shape x mesh) cell without materializing a single
+parameter (a 141B-param mixtral cell lowers on a laptop).
+
+``build_cell`` returns (step_fn, arg_specs, in_shardings) for the three
+step kinds:
+  train   — grad + AdamW update over microbatched global batch
+  prefill — bulk prompt processing producing the compressed KV cache
+  decode  — one-token serve step against a full (compressed) cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import act_sharding
+from repro.dist.sharding import (
+    batch_axes,
+    cache_shardings,
+    mesh_rules,
+    param_shardings,
+)
+from repro.models import (
+    decode_step,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["build_cell", "abstract_params", "abstract_cache", "CellSpec"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ArchConfig, opt: AdamWConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda: adamw_init(params, opt))
+
+
+def abstract_cache(cfg: ArchConfig, B: int, S: int):
+    return jax.eval_shape(lambda: init_decode_cache(cfg, B, S))
+
+
+def _aux_specs(cfg: ArchConfig, B: int):
+    dt = jnp.dtype(cfg.dtype)
+    aux = {}
+    if cfg.family == "encdec":
+        aux["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        aux["image_embeds"] = _sds((B, cfg.num_image_tokens, cfg.d_model), dt)
+    return aux
+
+
+@dataclasses.dataclass
+class CellSpec:
+    step_fn: Any                 # jit-able python callable
+    args: tuple                  # ShapeDtypeStructs (positional)
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig, microbatch: int):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation over ``microbatch`` slices via lax.scan: each
+    slice's backward is remat'd inside the model's scanned layers; the
+    accumulated grad feeds one AdamW update.
+    """
+
+    from repro.models.layers import scan_or_unroll
+
+    def step(params, opt_state, batch):
+        def mb_loss(p, mb_batch):
+            return loss_fn(p, cfg, mb_batch)
+
+        def acc_fn(acc, mb_batch):
+            loss, g = jax.value_and_grad(mb_loss)(params, mb_batch)
+            return jax.tree.map(jnp.add, acc,
+                                dict(g=g, loss=loss)), jnp.zeros(())
+
+        resh = jax.tree.map(
+            lambda x: x.reshape(microbatch, x.shape[0] // microbatch,
+                                *x.shape[1:]), batch)
+        zero = dict(
+            g=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            loss=jnp.zeros((), jnp.float32))
+        acc, _ = scan_or_unroll(acc_fn, zero, resh, unroll=cfg.unroll)
+        grads = jax.tree.map(lambda g: g / microbatch, acc["g"])
+        params, opt_state, stats = adamw_update(grads, opt_state, params, opt)
+        stats["loss"] = acc["loss"] / microbatch
+        return params, opt_state, stats
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------
+
+
+def _with_policy(fn, mesh, rules):
+    """Wrap a step fn so activation-sharding constraints apply at trace."""
+
+    def wrapped(*args):
+        with act_sharding.use(mesh, rules):
+            return fn(*args)
+
+    return wrapped
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               opt: AdamWConfig | None = None) -> CellSpec:
+    B, S = shape.global_batch, shape.seq_len
+    b_axes = batch_axes(mesh, B)
+    bspec = tuple(b_axes) if b_axes else None
+    dp = int(np.prod([mesh.shape[a] for a in b_axes])) if b_axes else 1
+    repl = NamedSharding(mesh, P())
+    act_rules = dict(mesh_rules(cfg, mesh))
+    act_rules["batch"] = bspec
+
+    if shape.kind == "train":
+        opt = opt or AdamWConfig()
+        params_s = abstract_params(cfg)
+        opt_s = abstract_opt_state(cfg, opt)
+        # microbatch count: keep per-device microbatch tokens bounded
+        mb = min(cfg.microbatch, max(B // dp, 1))
+        while B % mb or (B // mb) % dp:
+            mb -= 1
+        batch = {"tokens": _sds((B, S + 1), jnp.int32)}
+        batch.update(_aux_specs(cfg, B))
+        p_sh = param_shardings(cfg, params_s, mesh)
+        o_sh = {
+            "m": param_shardings(cfg, opt_s["m"], mesh),
+            "v": param_shardings(cfg, opt_s["v"], mesh),
+            "step": repl,
+        }
+        b_sh = jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(*((bspec,) + (None,) * (x.ndim - 1)))), batch)
+        step = _with_policy(make_train_step(cfg, opt, mb), mesh, act_rules)
+        return CellSpec(
+            step_fn=step,
+            args=(params_s, opt_s, batch),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh,
+                           {"grad_norm": repl, "lr": repl, "loss": repl}),
+            donate=(0, 1),
+            meta=dict(kind="train", microbatch=mb, tokens=B * S),
+        )
+
+    if shape.kind == "prefill":
+        params_s = abstract_params(cfg)
+        tokens = _sds((B, S), jnp.int32)
+        aux = _aux_specs(cfg, B)
+        p_sh = param_shardings(cfg, params_s, mesh)
+        tok_sh = NamedSharding(mesh, P(bspec, None))
+        aux_sh = {k: NamedSharding(mesh, P(bspec, None, None))
+                  for k in aux}
+        cache_s = abstract_cache(cfg, B, S)
+        c_sh = cache_shardings(cfg, cache_s, mesh, B)
+        logits_sh = NamedSharding(mesh, P(bspec, act_rules["vocab"]))
+
+        def step(params, tokens, aux_in):
+            return prefill(params, cfg, tokens, aux_in)
+
+        return CellSpec(
+            step_fn=_with_policy(step, mesh, act_rules),
+            args=(params_s, tokens, aux),
+            in_shardings=(p_sh, tok_sh, aux_sh),
+            out_shardings=(logits_sh, c_sh),
+            meta=dict(kind="prefill", tokens=B * S),
+        )
+
+    # decode / long_decode: one new token against an S-token cache
+    params_s = abstract_params(cfg)
+    cache_s = abstract_cache(cfg, B, S)
+    tokens = _sds((B,), jnp.int32)
+    p_sh = param_shardings(cfg, params_s, mesh)
+    c_sh = cache_shardings(cfg, cache_s, mesh, B)
+    tok_sh = NamedSharding(mesh, P(bspec))
+    logits_sh = NamedSharding(mesh, P(bspec, act_rules["vocab"]))
+
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+
+    return CellSpec(
+        step_fn=_with_policy(step, mesh, act_rules),
+        args=(params_s, cache_s, tokens),
+        in_shardings=(p_sh, c_sh, tok_sh),
+        out_shardings=(logits_sh, c_sh),
+        donate=(1,),
+        meta=dict(kind=shape.kind, tokens=B),
+    )

@@ -1,0 +1,10 @@
+"""Model zoo: config system + assembly for all assigned architecture families."""
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.models.lm import (
+    decode_step,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    prefill,
+    trunk,
+)

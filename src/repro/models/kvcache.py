@@ -1,0 +1,245 @@
+"""FRSZ2-compressed KV cache: the paper's technique inside LM serving.
+
+The decode-time KV cache has exactly the Krylov-basis access profile the
+paper optimizes (Sec. II): each entry is **written once** (at its token's
+step) and **re-read on every subsequent step** — a memory-bound stream that
+dominates long-context decode.  We store K and V as FRSZ2 blocks with
+``bs = head_dim``: one block (and one externalized ``e_max``) per
+(position, kv-head).  A block is always produced whole at append time, so
+the paper's whole-block-write constraint (Sec. IV-A) holds by construction —
+no renormalization path is ever needed.
+
+Formats:
+  * ``none``      — f32 cache (reference)
+  * ``bf16``      — cast compression (CB-GMRES float32-analogue baseline)
+  * ``frsz2_16``  — 16-bit codes + uint8 exponent  (~16.06 bits/value)
+  * ``frsz2_8``   — 8-bit codes + uint8 exponent   (~8.06 bits/value)
+
+``attend`` is the pure-jnp flash-decode (online softmax over KV chunks,
+decompress-per-chunk).  It is semantically identical to the Pallas kernel
+``repro.kernels.decode_attn`` (tests assert this); the jnp version is what
+multi-pod lowering/cost-analysis sees, the Pallas kernel is the TPU-target
+artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frsz2 as F
+from repro.core.frsz2 import _decode_block, _encode_block, _split_ieee
+
+f32 = jnp.float32
+
+__all__ = ["CacheFormat", "cache_format", "init_cache", "append", "attend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheFormat:
+    kind: str                  # 'raw' | 'frsz2'
+    l: int = 16                # code bits (frsz2)
+    raw_dtype: str = "bfloat16"
+
+    def spec(self, head_dim: int) -> F.FrszSpec:
+        return F.FrszSpec(bs=head_dim, l=self.l, dtype=jnp.float32,
+                          rounding="nearest", exp_dtype=jnp.uint8)
+
+    def code_dtype(self):
+        return jnp.uint8 if self.l <= 8 else jnp.uint16
+
+    def bits_per_value(self, head_dim: int) -> float:
+        if self.kind == "raw":
+            return jnp.dtype(self.raw_dtype).itemsize * 8
+        return (head_dim * self.l + 8) / head_dim
+
+
+def cache_format(name: str) -> CacheFormat:
+    if name in ("none", "f32", "float32"):
+        return CacheFormat(kind="raw", raw_dtype="float32")
+    if name in ("bf16", "bfloat16"):
+        return CacheFormat(kind="raw", raw_dtype="bfloat16")
+    if name.startswith("frsz2_"):
+        return CacheFormat(kind="frsz2", l=int(name.split("_")[1]))
+    raise ValueError(f"unknown kv format {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# codec on (..., D) vectors — one FRSZ2 block per trailing head_dim slice
+# ---------------------------------------------------------------------------
+
+
+def encode_heads(x, fmt: CacheFormat, head_dim: int):
+    """x (..., D) f32 -> (codes (..., D) uintN, exps (..., 1) uint8)."""
+    spec = fmt.spec(head_dim)
+    sign, e, sig = _split_ieee(x.astype(f32), spec)
+    emax = e.max(axis=-1)
+    c = _encode_block(sign, e, sig, emax, spec)
+    return c.astype(fmt.code_dtype()), emax[..., None].astype(jnp.uint8)
+
+
+def decode_heads(codes, exps, fmt: CacheFormat, head_dim: int):
+    """Inverse of :func:`encode_heads` -> (..., D) f32."""
+    spec = fmt.spec(head_dim)
+    return _decode_block(codes, exps[..., 0], spec)
+
+
+# ---------------------------------------------------------------------------
+# cache pytree: dict of arrays, layer-stacked so lax.scan can carry it
+# ---------------------------------------------------------------------------
+
+
+def init_cache(fmt: CacheFormat, L: int, B: int, Hkv: int, S: int, D: int):
+    """Layer-stacked cache.  Layout (L, B, Hkv, S, D) — S is shardable."""
+    if fmt.kind == "raw":
+        dt = jnp.dtype(fmt.raw_dtype)
+        return {
+            "k": jnp.zeros((L, B, Hkv, S, D), dt),
+            "v": jnp.zeros((L, B, Hkv, S, D), dt),
+        }
+    cd = fmt.code_dtype()
+    return {
+        "k_codes": jnp.zeros((L, B, Hkv, S, D), cd),
+        "k_exps": jnp.zeros((L, B, Hkv, S, 1), jnp.uint8),
+        "v_codes": jnp.zeros((L, B, Hkv, S, D), cd),
+        "v_exps": jnp.zeros((L, B, Hkv, S, 1), jnp.uint8),
+    }
+
+
+def append(layer_cache, k_new, v_new, lengths, fmt: CacheFormat, *,
+           ring: int = 0):
+    """Write k/v (B, T, Hkv, D) at per-sequence positions ``lengths``.
+
+    ``ring`` > 0 wraps positions modulo ``ring`` (sliding-window cache).
+    Works for T == 1 (decode) and T == S (prefill bulk write).
+    """
+    B, T, Hkv, D = k_new.shape
+    pos = lengths[:, None] + jnp.arange(T)[None, :]           # (B, T)
+    if ring:
+        pos = pos % ring
+    # scatter indices broadcast to (B, Hkv, T); values are (B, Hkv, T, ...)
+    bidx = jnp.arange(B)[:, None, None]
+    hidx = jnp.arange(Hkv)[None, :, None]
+    pidx = pos[:, None, :]
+    k_bhtd = k_new.transpose(0, 2, 1, 3)                      # (B,Hkv,T,D)
+    v_bhtd = v_new.transpose(0, 2, 1, 3)
+    if fmt.kind == "raw":
+        dt = layer_cache["k"].dtype
+        return {
+            "k": layer_cache["k"].at[bidx, hidx, pidx].set(k_bhtd.astype(dt)),
+            "v": layer_cache["v"].at[bidx, hidx, pidx].set(v_bhtd.astype(dt)),
+        }
+    kc, ke = encode_heads(k_bhtd.astype(f32), fmt, D)         # (B,Hkv,T,D)
+    vc, ve = encode_heads(v_bhtd.astype(f32), fmt, D)
+    return {
+        "k_codes": layer_cache["k_codes"].at[bidx, hidx, pidx].set(kc),
+        "k_exps": layer_cache["k_exps"].at[bidx, hidx, pidx].set(ke),
+        "v_codes": layer_cache["v_codes"].at[bidx, hidx, pidx].set(vc),
+        "v_exps": layer_cache["v_exps"].at[bidx, hidx, pidx].set(ve),
+    }
+
+
+def _chunk_kv(layer_cache, fmt: CacheFormat, i0: int, c: int, D: int):
+    """Decompress cache chunk [i0, i0+c) -> k, v (B, Hkv, c, D) f32."""
+    if fmt.kind == "raw":
+        k = jax.lax.dynamic_slice_in_dim(layer_cache["k"], i0, c, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(layer_cache["v"], i0, c, axis=2)
+        return k.astype(f32), v.astype(f32)
+    kc = jax.lax.dynamic_slice_in_dim(layer_cache["k_codes"], i0, c, axis=2)
+    ke = jax.lax.dynamic_slice_in_dim(layer_cache["k_exps"], i0, c, axis=2)
+    vc = jax.lax.dynamic_slice_in_dim(layer_cache["v_codes"], i0, c, axis=2)
+    ve = jax.lax.dynamic_slice_in_dim(layer_cache["v_exps"], i0, c, axis=2)
+    return (decode_heads(kc, ke, fmt, D), decode_heads(vc, ve, fmt, D))
+
+
+_NEG = -1e30
+
+
+def attend(q, layer_cache, lengths, fmt: CacheFormat, *, chunk: int = 0,
+           window: int = 0, ring: int = 0):
+    """Flash-decode semantics: q (B, H, D) against the (compressed) cache.
+
+    Lowered as one masked softmax over the full cache length — XLA/GSPMD
+    partitions the S axis cleanly (partial softmax + psum combine when S is
+    sharded over 'model'), with no dynamic slicing.  Decompression sits
+    between the code load and the QK dot; on real TPU hardware the Pallas
+    kernel (``repro.kernels.decode_attn``) implements the same math with
+    VMEM chunking and in-register decompression (tests assert equality).
+    ``window``: mask keys older than window. ``ring``: cache is a ring
+    buffer of that size (positions stored modulo ring).  ``chunk`` is
+    accepted for interface parity and ignored here.
+    """
+    B, H, D = q.shape
+    ref = layer_cache["k"] if fmt.kind == "raw" else layer_cache["k_codes"]
+    _, Hkv, S, _ = ref.shape
+    G = H // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, Hkv, G, D).astype(f32) * scale
+
+    k, v = _chunk_kv(layer_cache, fmt, 0, S, D)               # (B,Hkv,S,D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k)                  # (B,Hkv,G,S)
+    kpos = jnp.arange(S)
+    if ring:
+        # ring buffer: slot holds absolute position p ≡ slot (mod ring),
+        # p in [len - ring, len); reconstruct the absolute position.
+        wrap = (lengths[:, None] - 1 - kpos[None, :]) // ring
+        abs_pos = kpos[None, :] + jnp.maximum(wrap, 0) * ring
+        valid = (abs_pos < lengths[:, None]) & (
+            abs_pos >= lengths[:, None] - ring)
+    else:
+        valid = kpos[None, :] < lengths[:, None]              # (B, S)
+        if window:
+            valid &= kpos[None, :] >= lengths[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v)
+    o = o / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def build_cache(k_all, v_all, fmt: CacheFormat, *, cache_len: int = 0,
+                ring: int = 0):
+    """Bulk-construct one layer's cache from full-sequence K/V (prefill).
+
+    k/v (B, S, Hkv, D) -> cache dict with S axis = cache_len (padded) or
+    ring (last ``ring`` positions, placed at their modular slots).  No
+    scatter: the whole buffer is produced at once — which is also the
+    paper's whole-block-write discipline at maximum scale.
+    """
+    B, S, Hkv, D = k_all.shape
+    k_bhsd = k_all.transpose(0, 2, 1, 3)
+    v_bhsd = v_all.transpose(0, 2, 1, 3)
+    if ring and S > ring:
+        shift = (S - ring) % ring
+        k_bhsd = jnp.roll(k_bhsd[:, :, S - ring:], shift, axis=2)
+        v_bhsd = jnp.roll(v_bhsd[:, :, S - ring:], shift, axis=2)
+        S = ring
+    target = max(cache_len or S, S)
+    pad = [(0, 0), (0, 0), (0, target - S), (0, 0)]
+    if fmt.kind == "raw":
+        dt = jnp.dtype(fmt.raw_dtype)
+        return {
+            "k": jnp.pad(k_bhsd.astype(dt), pad),
+            "v": jnp.pad(v_bhsd.astype(dt), pad),
+        }
+    kc, ke = encode_heads(k_bhsd.astype(f32), fmt, D)
+    vc, ve = encode_heads(v_bhsd.astype(f32), fmt, D)
+    pad_e = pad[:3] + [(0, 0)]
+    return {
+        "k_codes": jnp.pad(kc, pad),
+        "k_exps": jnp.pad(ke, pad_e),
+        "v_codes": jnp.pad(vc, pad),
+        "v_exps": jnp.pad(ve, pad_e),
+    }
+
+
+def cache_nbytes(fmt: CacheFormat, L, B, Hkv, S, D) -> int:
+    n = L * B * Hkv * S
+    if fmt.kind == "raw":
+        return 2 * n * D * jnp.dtype(fmt.raw_dtype).itemsize
+    return 2 * n * (D * jnp.dtype(fmt.code_dtype()).itemsize + 1)

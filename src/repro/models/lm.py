@@ -1,0 +1,734 @@
+"""Model assembly: init / train-loss / prefill / decode for all families.
+
+Families (``ArchConfig.family``):
+  dense   — pre-norm GQA decoder (internlm2, yi, granite, mistral-nemo)
+  moe     — GQA + grouped top-k MoE FFN, optional sliding window (mixtral,
+            llama4-scout)
+  encdec  — whisper: bidirectional encoder over stub frame embeddings +
+            causal decoder with cross-attention
+  vlm     — llama-3.2-vision: decoder with a cross-attention layer after
+            every ``cross_attn_every`` self-attention layers (image patch
+            embeddings stubbed)
+  ssm     — falcon-mamba: pure Mamba1 stack (attention-free)
+  hybrid  — zamba2: Mamba2 stack with ONE shared attention block applied
+            every ``attn_every`` layers (each application has its own KV
+            cache but shares weights)
+
+Layer stacks are scanned (params stacked on a leading L axis) so the HLO
+stays compact for the 80-compile dry-run matrix.  ``remat`` wraps scan
+bodies with jax.checkpoint.
+
+Decode-time KV caches live in ``repro.models.kvcache`` and are FRSZ2-
+compressed per the paper's technique (``cfg.kv_format``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import kvcache as kv
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    attention_block,
+    attention_qkv,
+    blocked_attention,
+    moe_block,
+    rms_norm,
+    scan_or_unroll,
+    swiglu_block,
+)
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, f32) * scale).astype(dtype)
+
+
+def _attn_params(key, cfg: ArchConfig, L, dt):
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s_in = d ** -0.5
+    s_out = (H * hd) ** -0.5 / np.sqrt(2 * max(cfg.num_layers, 1))
+    shp = lambda *s: (L, *s) if L else s
+    return {
+        "ln": jnp.ones(shp(d), dt),
+        "wq": _init(ks[0], shp(d, H * hd), s_in, dt),
+        "wk": _init(ks[1], shp(d, Hkv * hd), s_in, dt),
+        "wv": _init(ks[2], shp(d, Hkv * hd), s_in, dt),
+        "wo": _init(ks[3], shp(H * hd, d), s_out, dt),
+    }
+
+
+def _mlp_params(key, cfg, L, dt):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s_out = ff ** -0.5 / np.sqrt(2 * max(cfg.num_layers, 1))
+    shp = lambda *s: (L, *s) if L else s
+    return {
+        "ln": jnp.ones(shp(d), dt),
+        "wg": _init(ks[0], shp(d, ff), d ** -0.5, dt),
+        "wi": _init(ks[1], shp(d, ff), d ** -0.5, dt),
+        "wo": _init(ks[2], shp(ff, d), s_out, dt),
+    }
+
+
+def _moe_params(key, cfg, L, dt):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    s_out = ff ** -0.5 / np.sqrt(2 * max(cfg.num_layers, 1))
+    shp = lambda *s: (L, *s) if L else s
+    return {
+        "ln": jnp.ones(shp(d), dt),
+        "router": _init(ks[0], shp(d, E), d ** -0.5, f32),
+        "wg": _init(ks[1], shp(E, d, ff), d ** -0.5, dt),
+        "wi": _init(ks[2], shp(E, d, ff), d ** -0.5, dt),
+        "wo": _init(ks[3], shp(E, ff, d), s_out, dt),
+    }
+
+
+def _mamba1_params(key, cfg, L, dt):
+    d, di, N, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    R = max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    shp = lambda *s: (L, *s) if L else s
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[5], shp(di), f32) * float(np.log(0.1 / 1e-3))
+        + float(np.log(1e-3)))
+    return {
+        "ln": jnp.ones(shp(d), dt),
+        "in_proj": _init(ks[0], shp(d, 2 * di), d ** -0.5, dt),
+        "conv_w": _init(ks[1], shp(W, di), W ** -0.5, dt),
+        "conv_b": jnp.zeros(shp(di), dt),
+        "x_proj": _init(ks[2], shp(di, R + 2 * N), di ** -0.5, dt),
+        "dt_proj": _init(ks[3], shp(R, di), R ** -0.5, dt),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),               # softplus^-1
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, N + 1, dtype=f32)), shp(di, N)),
+        "D": jnp.ones(shp(di), f32),
+        "out_proj": _init(ks[4], shp(di, d),
+                          di ** -0.5 / np.sqrt(2 * cfg.num_layers), dt),
+    }
+
+
+def _mamba2_params(key, cfg, L, dt):
+    d, di, N, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    P = cfg.ssm_head_dim
+    Hs = di // P
+    ks = jax.random.split(key, 4)
+    shp = lambda *s: (L, *s) if L else s
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[3], shp(Hs), f32) * float(np.log(0.1 / 1e-3))
+        + float(np.log(1e-3)))
+    return {
+        "ln": jnp.ones(shp(d), dt),
+        "in_proj": _init(ks[0], shp(d, 2 * di + 2 * N + Hs), d ** -0.5, dt),
+        "conv_w": _init(ks[1], shp(W, di), W ** -0.5, dt),
+        "conv_b": jnp.zeros(shp(di), dt),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),
+        "A_log": jnp.zeros(shp(Hs), f32),
+        "D": jnp.ones(shp(Hs), f32),
+        "out_ln": jnp.ones(shp(di), dt),
+        "out_proj": _init(ks[2], shp(di, d),
+                          di ** -0.5 / np.sqrt(2 * cfg.num_layers), dt),
+    }
+
+
+def init_params(cfg: ArchConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    keys = jax.random.split(key, 8)
+    params = {
+        "embed": _init(keys[0], (V, d), 0.02, dt),
+        "final_ln": jnp.ones((d,), dt),
+        "unembed": _init(keys[1], (d, V), d ** -0.5, dt),
+    }
+    fam = cfg.family
+    if fam in ("dense",):
+        params["layers"] = {
+            "attn": _attn_params(keys[2], cfg, L, dt),
+            "mlp": _mlp_params(keys[3], cfg, L, dt),
+        }
+    elif fam == "moe":
+        params["layers"] = {
+            "attn": _attn_params(keys[2], cfg, L, dt),
+            "moe": _moe_params(keys[3], cfg, L, dt),
+        }
+    elif fam == "ssm":
+        params["layers"] = _mamba1_params(keys[2], cfg, L, dt)
+    elif fam == "hybrid":
+        k = cfg.attn_every
+        R = L // k if k else 0
+        body = R * k
+        params["layers"] = _mamba2_params(keys[2], cfg, body, dt)
+        if L - body:
+            params["tail_layers"] = _mamba2_params(keys[3], cfg, L - body, dt)
+        params["shared_attn"] = _attn_params(keys[4], cfg, 0, dt)
+        params["shared_mlp"] = _mlp_params(keys[5], cfg, 0, dt)
+    elif fam == "encdec":
+        Le = cfg.encoder_layers
+        params["encoder"] = {
+            "layers": {
+                "attn": _attn_params(keys[2], cfg, Le, dt),
+                "mlp": _mlp_params(keys[3], cfg, Le, dt),
+            },
+            "final_ln": jnp.ones((d,), dt),
+        }
+        params["layers"] = {
+            "attn": _attn_params(keys[4], cfg, L, dt),
+            "cross": _attn_params(keys[5], cfg, L, dt),
+            "mlp": _mlp_params(keys[6], cfg, L, dt),
+        }
+    elif fam == "vlm":
+        k = cfg.cross_attn_every
+        R = L // k
+        params["layers"] = {
+            "attn": _attn_params(keys[2], cfg, L, dt),
+            "mlp": _mlp_params(keys[3], cfg, L, dt),
+        }
+        params["cross_layers"] = {
+            "attn": _attn_params(keys[4], cfg, R, dt),
+            "mlp": _mlp_params(keys[5], cfg, R, dt),
+        }
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# scanned stacks
+# ---------------------------------------------------------------------------
+
+
+def _scan_stack(h, stacked, body, cfg, collect_aux=False):
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body_fn = jax.checkpoint(body, policy=policy)
+    else:
+        body_fn = body
+
+    def f(carry, lp):
+        out = body_fn(carry, lp)
+        if collect_aux:
+            return out[0], out[1]
+        return out, jnp.zeros(())
+
+    h, aux = scan_or_unroll(f, h, stacked, unroll=cfg.unroll)
+    if collect_aux:
+        return h, jnp.sum(aux)
+    return h
+
+
+def _scan_emit(body, carry, xs, cfg):
+    return scan_or_unroll(body, carry, xs, unroll=cfg.unroll)
+
+
+def _dense_body(cfg, positions, window):
+    def body(h, lp):
+        h = attention_block(h, lp["attn"], cfg, positions=positions,
+                            window=window)
+        return swiglu_block(h, lp["mlp"])
+    return body
+
+
+def _moe_body(cfg, positions, window):
+    def body(h, lp):
+        h = attention_block(h, lp["attn"], cfg, positions=positions,
+                            window=window)
+        h, aux = moe_block(h, lp["moe"], cfg)
+        return h, aux
+    return body
+
+
+# ---------------------------------------------------------------------------
+# training forward (logits-producing trunk per family)
+# ---------------------------------------------------------------------------
+
+
+def trunk(params, cfg: ArchConfig, tokens, aux_inputs=None):
+    """tokens (B, S) -> hidden states (B, S, d) + moe aux loss."""
+    B, S = tokens.shape
+    h = params["embed"][tokens]
+    positions = jnp.arange(S)
+    aux = jnp.zeros((), f32)
+    fam = cfg.family
+
+    if fam == "dense":
+        h = _scan_stack(h, params["layers"],
+                        _dense_body(cfg, positions, cfg.window), cfg)
+    elif fam == "moe":
+        h, aux = _scan_stack(h, params["layers"],
+                             _moe_body(cfg, positions, cfg.window), cfg,
+                             collect_aux=True)
+    elif fam == "ssm":
+        def body(hh, lp):
+            return ssm_mod.mamba1_seq(hh, lp, cfg)
+        h = _scan_stack(h, params["layers"], body, cfg)
+    elif fam == "hybrid":
+        k = cfg.attn_every
+        L = cfg.num_layers
+        R = (L // k)
+        stk = jax.tree.map(
+            lambda x: x.reshape(R, k, *x.shape[1:]), params["layers"])
+        shared_attn = params["shared_attn"]
+        shared_mlp = params["shared_mlp"]
+
+        def round_body(hh, rp):
+            def inner(h2, lp):
+                return ssm_mod.mamba2_seq(h2, lp, cfg)
+            hh = _scan_stack(hh, rp, inner, cfg)
+            hh = attention_block(hh, shared_attn, cfg, positions=positions)
+            return swiglu_block(hh, shared_mlp)
+
+        h = _scan_stack(h, stk, round_body, cfg)
+        if "tail_layers" in params:
+            def tail(h2, lp):
+                return ssm_mod.mamba2_seq(h2, lp, cfg)
+            h = _scan_stack(h, params["tail_layers"], tail, cfg)
+    elif fam == "encdec":
+        frames = aux_inputs["frames"]                          # (B, Se, d)
+        enc = frames.astype(h.dtype)
+        enc_pos = jnp.arange(enc.shape[1])
+
+        def enc_body(hh, lp):
+            hh = attention_block(hh, lp["attn"], cfg, positions=enc_pos,
+                                 causal=False)
+            return swiglu_block(hh, lp["mlp"])
+
+        enc = _scan_stack(enc, params["encoder"]["layers"], enc_body, cfg)
+        enc = rms_norm(enc, params["encoder"]["final_ln"])
+
+        def dec_body(hh, lp):
+            hh = attention_block(hh, lp["attn"], cfg, positions=positions)
+            hh = attention_block(hh, lp["cross"], cfg, positions=positions,
+                                 kv_src=enc)
+            return swiglu_block(hh, lp["mlp"])
+
+        h = _scan_stack(h, params["layers"], dec_body, cfg)
+    elif fam == "vlm":
+        img = aux_inputs["image_embeds"].astype(h.dtype)       # (B, Si, d)
+        k = cfg.cross_attn_every
+        L = cfg.num_layers
+        R = L // k
+        stk = jax.tree.map(
+            lambda x: x.reshape(R, k, *x.shape[1:]), params["layers"])
+
+        def round_body(hh, rp):
+            self_p, cross_p = rp
+
+            def inner(h2, lp):
+                h2 = attention_block(h2, lp["attn"], cfg, positions=positions)
+                return swiglu_block(h2, lp["mlp"])
+
+            hh = _scan_stack(hh, self_p, inner, cfg)
+            hh = attention_block(hh, cross_p["attn"], cfg,
+                                 positions=positions, kv_src=img)
+            return swiglu_block(hh, cross_p["mlp"])
+
+        h = _scan_stack(h, (stk, params["cross_layers"]), round_body, cfg)
+    else:
+        raise ValueError(fam)
+    return h, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, vocab_chunk: int = 1024,
+            z_loss: float = 1e-4):
+    """Next-token cross entropy, seq-chunked so (B,S,V) never materializes."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    h, aux = trunk(params, cfg, inputs,
+                   {k: v for k, v in batch.items() if k != "tokens"})
+    h = rms_norm(h, params["final_ln"])
+    B, S, d = h.shape
+    c = min(vocab_chunk, S)
+    nc = S // c
+    hc = h.reshape(B, nc, c, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, c).transpose(1, 0, 2)
+    unemb = params["unembed"]
+
+    def step(acc, args):
+        hcc, tcc = args
+        logits = (hcc @ unemb).astype(f32)                    # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tcc[..., None], axis=-1)[..., 0]
+        ce = (lse - tgt).sum()
+        zl = jnp.square(lse).sum()
+        return (acc[0] + ce, acc[1] + zl), None
+
+    (ce, zl), _ = scan_or_unroll(step, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, tc), unroll=cfg.unroll)
+    ntok = B * S
+    return ce / ntok + z_loss * zl / ntok + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with (compressed) caches
+# ---------------------------------------------------------------------------
+
+
+def _cache_fmt(cfg: ArchConfig) -> kv.CacheFormat:
+    return kv.cache_format(cfg.kv_format)
+
+
+def _cache_seq(cfg: ArchConfig, S: int) -> int:
+    """Allocated cache length: ring of `window` for SWA else full S."""
+    return min(cfg.window, S) if cfg.window else S
+
+
+def init_decode_cache(cfg: ArchConfig, B: int, S: int):
+    """Allocate the decode cache pytree for max context S."""
+    fmt = _cache_fmt(cfg)
+    Hkv, D = cfg.num_kv_heads, cfg.hd
+    fam = cfg.family
+    cache = {"lengths": jnp.zeros((B,), jnp.int32)}
+    Sc = _cache_seq(cfg, S)
+    if fam in ("dense", "moe"):
+        cache["self"] = kv.init_cache(fmt, cfg.num_layers, B, Hkv, Sc, D)
+    elif fam == "encdec":
+        cache["self"] = kv.init_cache(fmt, cfg.num_layers, B, Hkv, Sc, D)
+        Se = _round_up(cfg.encoder_seq, 128)
+        cache["cross"] = kv.init_cache(fmt, cfg.num_layers, B, Hkv, Se, D)
+    elif fam == "vlm":
+        cache["self"] = kv.init_cache(fmt, cfg.num_layers, B, Hkv, Sc, D)
+        R = cfg.num_layers // cfg.cross_attn_every
+        Si = _round_up(cfg.num_image_tokens, 128)
+        cache["cross"] = kv.init_cache(fmt, R, B, Hkv, Si, D)
+    elif fam == "ssm":
+        L, di, N, W = cfg.num_layers, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        cache["ssm_h"] = jnp.zeros((L, B, di, N), f32)
+        cache["ssm_conv"] = jnp.zeros((L, B, W - 1, di), jnp.dtype(cfg.dtype))
+    elif fam == "hybrid":
+        L, di, N, W = cfg.num_layers, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        P = cfg.ssm_head_dim
+        Hs = di // P
+        R = cfg.num_layers // cfg.attn_every
+        cache["ssm_h"] = jnp.zeros((L, B, Hs, P, N), f32)
+        cache["ssm_conv"] = jnp.zeros((L, B, W - 1, di), jnp.dtype(cfg.dtype))
+        cache["self"] = kv.init_cache(fmt, R, B, Hkv, Sc, D)
+    return cache
+
+
+def _round_up(x, m):
+    return -(-x // m) * m
+
+
+def _self_attn_decode(h, lp, cfg, layer_cache, lengths, fmt, ring):
+    """One decode step of a self-attention block against its cache."""
+    B = h.shape[0]
+    hn = rms_norm(h, lp["ln"])
+    q, k, v = attention_qkv(hn, lp, cfg, positions=lengths[:, None])
+    layer_cache = kv.append(layer_cache, k, v, lengths, fmt,
+                            ring=ring)
+    o = kv.attend(q[:, 0], layer_cache, lengths + 1, fmt,
+                  chunk=cfg.decode_chunk, window=cfg.window,
+                  ring=ring)
+    return h + (o.reshape(B, 1, -1) @ lp["wo"]), layer_cache
+
+
+def _cross_attn_decode(h, lp, cfg, layer_cache, src_len, fmt):
+    B = h.shape[0]
+    Hkv, hd, H = cfg.num_kv_heads, cfg.hd, cfg.num_heads
+    hn = rms_norm(h, lp["ln"])
+    q = (hn @ lp["wq"]).reshape(B, 1, H, hd)                  # no rope (cross)
+    o = kv.attend(q[:, 0], layer_cache, src_len, fmt,
+                  chunk=cfg.decode_chunk)
+    return h + (o.reshape(B, 1, -1) @ lp["wo"])
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens):
+    """One-token decode.  tokens (B,) int32 -> (logits (B, V), new cache)."""
+    fmt = _cache_fmt(cfg)
+    lengths = cache["lengths"]
+    B = tokens.shape[0]
+    h = params["embed"][tokens][:, None, :]                   # (B, 1, d)
+    fam = cfg.family
+    ring = _cache_seq(cfg, 1 << 30) if cfg.window else 0
+
+    if fam in ("dense", "moe"):
+        def body(hh, xs):
+            lp, lc = xs
+            hh, lc = _self_attn_decode(hh, lp["attn"], cfg, lc, lengths,
+                                       fmt, ring)
+            if fam == "moe":
+                hh, _ = moe_block(hh, lp["moe"], cfg)
+            else:
+                hh = swiglu_block(hh, lp["mlp"])
+            return hh, lc
+
+        h, new_self = _scan_emit(body, h, (params["layers"], cache["self"]), cfg)
+        cache = dict(cache, self=new_self)
+    elif fam == "encdec":
+        src_len = jnp.full((B,), cfg.encoder_seq, jnp.int32)
+
+        def body(hh, xs):
+            lp, lc_self, lc_cross = xs
+            hh, lc_self = _self_attn_decode(hh, lp["attn"], cfg, lc_self,
+                                            lengths, fmt, ring)
+            hh = _cross_attn_decode(hh, lp["cross"], cfg, lc_cross,
+                                    src_len, fmt)
+            hh = swiglu_block(hh, lp["mlp"])
+            return hh, lc_self
+
+        h, new_self = _scan_emit(
+            body, h, (params["layers"], cache["self"], cache["cross"]), cfg)
+        cache = dict(cache, self=new_self)
+    elif fam == "vlm":
+        k = cfg.cross_attn_every
+        L = cfg.num_layers
+        R = L // k
+        src_len = jnp.full((B,), cfg.num_image_tokens, jnp.int32)
+        stk = jax.tree.map(lambda x: x.reshape(R, k, *x.shape[1:]),
+                           params["layers"])
+        cache_r = jax.tree.map(lambda x: x.reshape(R, k, *x.shape[1:]),
+                               cache["self"])
+
+        def round_body(hh, xs):
+            self_p, cross_p, lc_self, lc_cross = xs
+
+            def inner(h2, ys):
+                lp, lc = ys
+                h2, lc = _self_attn_decode(h2, lp["attn"], cfg, lc, lengths,
+                                           fmt, ring)
+                return swiglu_block(h2, lp["mlp"]), lc
+
+            hh, lc_self = _scan_emit(inner, hh, (self_p, lc_self), cfg)
+            hh = _cross_attn_decode(hh, cross_p["attn"], cfg, lc_cross,
+                                    src_len, fmt)
+            hh = swiglu_block(hh, cross_p["mlp"])
+            return hh, lc_self
+
+        h, new_self = _scan_emit(
+            round_body, h,
+            (stk, params["cross_layers"], cache_r, cache["cross"]), cfg)
+        new_self = jax.tree.map(
+            lambda x: x.reshape(L, *x.shape[2:]), new_self)
+        cache = dict(cache, self=new_self)
+    elif fam == "ssm":
+        def body(hh, xs):
+            lp, h0, cs = xs
+            hh, (h1, cs1) = ssm_mod.mamba1_decode(hh, lp, cfg, (h0, cs))
+            return hh, (h1, cs1)
+
+        h, (new_h, new_conv) = _scan_emit(
+            body, h, (params["layers"], cache["ssm_h"], cache["ssm_conv"]),
+            cfg)
+        cache = dict(cache, ssm_h=new_h, ssm_conv=new_conv)
+    elif fam == "hybrid":
+        k = cfg.attn_every
+        L = cfg.num_layers
+        R = L // k
+        body_n = R * k
+        stk = jax.tree.map(
+            lambda x: x.reshape(R, k, *x.shape[1:]), params["layers"])
+        h_r = jax.tree.map(lambda x: x.reshape(R, k, *x.shape[1:]),
+                           (cache["ssm_h"][:body_n], cache["ssm_conv"][:body_n]))
+        shared_attn, shared_mlp = params["shared_attn"], params["shared_mlp"]
+
+        def round_body(hh, xs):
+            rp, (h0s, css), lc = xs
+
+            def inner(h2, ys):
+                lp, h0, cs = ys
+                h2, st = ssm_mod.mamba2_decode(h2, lp, cfg, (h0, cs))
+                return h2, st
+
+            hh, (h1s, cs1) = _scan_emit(inner, hh, (rp, h0s, css), cfg)
+            hh, lc = _self_attn_decode(hh, shared_attn, cfg, lc, lengths,
+                                       fmt, ring)
+            hh = swiglu_block(hh, shared_mlp)
+            return hh, ((h1s, cs1), lc)
+
+        h, ((h1, cs1), new_attn) = _scan_emit(
+            round_body, h, (stk, h_r, cache["self"]), cfg)
+        new_h = jnp.concatenate(
+            [h1.reshape(body_n, *h1.shape[2:])] +
+            ([] if body_n == L else [cache["ssm_h"][body_n:]]), axis=0)
+        new_conv = jnp.concatenate(
+            [cs1.reshape(body_n, *cs1.shape[2:])] +
+            ([] if body_n == L else [cache["ssm_conv"][body_n:]]), axis=0)
+        if body_n != L:
+            def tail(h2, ys):
+                lp, h0, cs = ys
+                h2, st = ssm_mod.mamba2_decode(h2, lp, cfg, (h0, cs))
+                return h2, st
+
+            h, (ht, cst) = _scan_emit(
+                tail, h, (params["tail_layers"], cache["ssm_h"][body_n:],
+                          cache["ssm_conv"][body_n:]), cfg)
+            new_h = jnp.concatenate(
+                [h1.reshape(body_n, *h1.shape[2:]), ht], axis=0)
+            new_conv = jnp.concatenate(
+                [cs1.reshape(body_n, *cs1.shape[2:]), cst], axis=0)
+        cache = dict(cache, ssm_h=new_h, ssm_conv=new_conv, self=new_attn)
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(h[:, 0], params["final_ln"])
+    logits = (h @ params["unembed"]).astype(f32)
+    cache = dict(cache, lengths=lengths + 1)
+    return logits, cache
+
+
+def prefill(params, cfg: ArchConfig, tokens, aux_inputs=None, *,
+            cache_len: int = 0):
+    """Bulk-process a prompt: returns (last-token logits, populated cache).
+
+    For attention families this runs the training trunk (blocked attention)
+    and *emits* each layer's compressed cache whole from the scan (no
+    scatter — the paper's whole-block-write discipline); for SSM/hybrid it
+    runs the sequence scan and keeps the final state.  ``cache_len`` pads
+    the cache for subsequent decode steps (defaults to the prompt length).
+    """
+    fmt = _cache_fmt(cfg)
+    B, S = tokens.shape
+    fam = cfg.family
+    positions = jnp.arange(S)
+    ring = _cache_seq(cfg, S) if cfg.window else 0
+    c_len = max(cache_len, _cache_seq(cfg, S))
+    h = params["embed"][tokens]
+    cache = {}
+
+    def attn_and_cache(hh, lp, *, window):
+        """Self-attention over full prompt + whole-buffer cache build."""
+        hn = rms_norm(hh, lp["ln"])
+        q, k, v = attention_qkv(hn, lp, cfg, positions=positions)
+        o = blocked_attention(q, k, v, causal=True, window=window,
+                              chunk_q=cfg.attn_chunk, chunk_k=cfg.attn_chunk,
+                              unroll=cfg.unroll)
+        lc = kv.build_cache(k, v, fmt, cache_len=c_len, ring=ring)
+        B_, S_, H, hd = q.shape
+        return hh + o.reshape(B_, S_, H * hd) @ lp["wo"], lc
+
+    def cross_kv_cache(src, lp):
+        """Cache cross-attention K/V computed from encoder/image states."""
+        Hkv, hd = cfg.num_kv_heads, cfg.hd
+        Bs, Ss, _ = src.shape
+        k = (src @ lp["wk"]).reshape(Bs, Ss, Hkv, hd)
+        v = (src @ lp["wv"]).reshape(Bs, Ss, Hkv, hd)
+        return kv.build_cache(k, v, fmt)
+
+    def cross_attend_full(hh, lp, src):
+        hn = rms_norm(hh, lp["ln"])
+        B_, S_, _ = hn.shape
+        q = (hn @ lp["wq"]).reshape(B_, S_, cfg.num_heads, cfg.hd)
+        k = (src @ lp["wk"]).reshape(B_, -1, cfg.num_kv_heads, cfg.hd)
+        v = (src @ lp["wv"]).reshape(B_, -1, cfg.num_kv_heads, cfg.hd)
+        o = blocked_attention(q, k, v, causal=False,
+                              chunk_q=cfg.attn_chunk,
+                              chunk_k=min(cfg.attn_chunk, k.shape[1]),
+                              unroll=cfg.unroll)
+        return hh + o.reshape(B_, S_, -1) @ lp["wo"]
+
+    if fam in ("dense", "moe"):
+        def body(hh, lp):
+            hh, lc = attn_and_cache(hh, lp["attn"], window=cfg.window)
+            if fam == "moe":
+                hh, _ = moe_block(hh, lp["moe"], cfg)
+            else:
+                hh = swiglu_block(hh, lp["mlp"])
+            return hh, lc
+
+        h, new_self = _scan_emit(body, h, params["layers"], cfg)
+        cache["self"] = new_self
+    elif fam == "encdec":
+        frames = aux_inputs["frames"].astype(h.dtype)
+        enc_pos = jnp.arange(frames.shape[1])
+
+        def enc_body(hh, lp):
+            hh = attention_block(hh, lp["attn"], cfg, positions=enc_pos,
+                                 causal=False)
+            return swiglu_block(hh, lp["mlp"]), None
+
+        enc, _ = _scan_emit(enc_body, frames, params["encoder"]["layers"],
+                            cfg)
+        enc = rms_norm(enc, params["encoder"]["final_ln"])
+
+        def body(hh, lp):
+            hh, lc_self = attn_and_cache(hh, lp["attn"], window=0)
+            lc_cross = cross_kv_cache(enc, lp["cross"])
+            hh = cross_attend_full(hh, lp["cross"], enc)
+            hh = swiglu_block(hh, lp["mlp"])
+            return hh, (lc_self, lc_cross)
+
+        h, (new_self, new_cross) = _scan_emit(body, h, params["layers"], cfg)
+        cache["self"] = new_self
+        cache["cross"] = new_cross
+    elif fam == "vlm":
+        img = aux_inputs["image_embeds"].astype(h.dtype)
+        k_ = cfg.cross_attn_every
+        L = cfg.num_layers
+        R = L // k_
+        stk = jax.tree.map(lambda x: x.reshape(R, k_, *x.shape[1:]),
+                           params["layers"])
+
+        def round_body(hh, xs):
+            self_p, cross_p = xs
+
+            def inner(h2, lp):
+                h2, lc = attn_and_cache(h2, lp["attn"], window=0)
+                return swiglu_block(h2, lp["mlp"]), lc
+
+            hh, lc_self = _scan_emit(inner, hh, self_p, cfg)
+            lc_cross = cross_kv_cache(img, cross_p["attn"])
+            hh = cross_attend_full(hh, cross_p["attn"], img)
+            hh = swiglu_block(hh, cross_p["mlp"])
+            return hh, (lc_self, lc_cross)
+
+        h, (new_self_r, new_cross) = _scan_emit(
+            round_body, h, (stk, params["cross_layers"]), cfg)
+        new_self = jax.tree.map(lambda x: x.reshape(L, *x.shape[2:]),
+                                new_self_r)
+        cache["self"] = new_self
+        cache["cross"] = new_cross
+    elif fam == "ssm":
+        def body(hh, lp):
+            hh, st = ssm_mod.mamba1_seq(hh, lp, cfg, return_state=True)
+            return hh, st
+
+        h, (new_h, new_conv) = _scan_emit(body, h, params["layers"], cfg)
+        cache["ssm_h"] = new_h
+        cache["ssm_conv"] = new_conv
+    elif fam == "hybrid":
+        k_ = cfg.attn_every
+        L = cfg.num_layers
+        R = L // k_
+        body_n = R * k_
+        stk = jax.tree.map(
+            lambda x: x.reshape(R, k_, *x.shape[1:]), params["layers"])
+        shared_attn, shared_mlp = (params["shared_attn"],
+                                   params["shared_mlp"])
+
+        def inner(h2, lp):
+            h2, st = ssm_mod.mamba2_seq(h2, lp, cfg, return_state=True)
+            return h2, st
+
+        def round_body(hh, rp):
+            hh, (h1s, cs1) = _scan_emit(inner, hh, rp, cfg)
+            hh, lc = attn_and_cache(hh, shared_attn, window=0)
+            hh = swiglu_block(hh, shared_mlp)
+            return hh, ((h1s, cs1), lc)
+
+        h, ((h1, cs1), new_attn) = _scan_emit(round_body, h, stk, cfg)
+        new_h = h1.reshape(body_n, *h1.shape[2:])
+        new_conv = cs1.reshape(body_n, *cs1.shape[2:])
+        if body_n != L:
+            h, (ht, cst) = _scan_emit(inner, h, params["tail_layers"], cfg)
+            new_h = jnp.concatenate([new_h, ht], axis=0)
+            new_conv = jnp.concatenate([new_conv, cst], axis=0)
+        cache["ssm_h"] = new_h
+        cache["ssm_conv"] = new_conv
+        cache["self"] = new_attn
+    h_last = rms_norm(h[:, -1], params["final_ln"])
+    logits = (h_last @ params["unembed"]).astype(f32)
+    cache["lengths"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache

@@ -1,0 +1,214 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+TPU adaptation notes (DESIGN.md §3): the CUDA reference implementations use
+a fused selective-scan kernel with recomputation; here
+
+* **Mamba1** trains with a chunked associative scan (``lax.scan`` over
+  chunks of ``ssm_chunk`` steps, ``associative_scan`` inside) so the
+  materialized state tensor is (B, chunk, d_inner, N) instead of
+  (B, L, d_inner, N);
+* **Mamba2** uses the SSD block-matrix form (intra-chunk attention-like
+  matmuls + inter-chunk state passing) — MXU-friendly: the hot ops are
+  (c × c) and (c × N/P) matmuls, not elementwise scans.
+
+Decode for both is a single-step recurrence carrying O(B · d_inner · N)
+state — no KV cache, which is why the paper's cache-compression technique
+is *inapplicable* to the pure-SSM architecture (DESIGN.md
+§Arch-applicability): there is no written-once/re-read-many stream.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import rms_norm, scan_or_unroll
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv along axis 1.  x (B, L, C); w (W, C); b (C).
+
+    With ``state`` (B, W-1, C) provided, uses it as left context and also
+    returns the new state (decode path; works for L == 1).
+    """
+    B, L, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros((B, L, C), f32)
+    for i in range(W):                                        # W ~ 4: unrolled
+        out = out + xp[:, i:i + L].astype(f32) * w[i].astype(f32)
+    out = out + b.astype(f32)
+    new_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return out.astype(x.dtype), new_state
+
+
+def _scan_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, b1 * a2 + b2
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_seq(x, p, cfg, *, h0=None, conv_state=None, return_state=False):
+    """Mamba1 over a sequence.  x (B, L, d) -> (B, L, d).
+
+    h0 (B, di, N) and conv_state (B, W-1, di) carry decode state.
+    """
+    B, L, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    h = rms_norm(x, p["ln"])
+    xz = h @ p["in_proj"]                                     # (B, L, 2di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = causal_conv(xi, p["conv_w"], p["conv_b"],
+                                 state=conv_state)
+    xi = jax.nn.silu(xi)
+
+    xdb = xi @ p["x_proj"]                                    # (B,L,R+2N)
+    dt_r, Bm, Cm = jnp.split(xdb, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])  # (B,L,di)
+    A = -jnp.exp(p["A_log"].astype(f32))                      # (di, N)
+
+    c = min(cfg.ssm_chunk, L)
+    while L % c:
+        c -= 1
+    nchunk = L // c
+    xi_c = xi.reshape(B, nchunk, c, di)
+    dt_c = dt.reshape(B, nchunk, c, di).astype(f32)
+    B_c = Bm.reshape(B, nchunk, c, N).astype(f32)
+    C_c = Cm.reshape(B, nchunk, c, N).astype(f32)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), f32)
+
+    def chunk_step(hprev, args):
+        xc, dtc, Bc, Cc = args                                # (B,c,di) etc.
+        a = jnp.exp(dtc[..., None] * A)                       # (B,c,di,N)
+        bx = (dtc * xc.astype(f32))[..., None] * Bc[:, :, None, :]
+        aa, bb = jax.lax.associative_scan(_scan_combine, (a, bx), axis=1)
+        hs = aa * hprev[:, None] + bb                         # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Cc)
+        return hs[:, -1], y
+
+    # chunk-level remat: without it, the backward pass keeps every
+    # chunk's (B, c, d_inner, N) scan elements alive simultaneously
+    # (~17 GiB/device for falcon-mamba train_4k — EXPERIMENTS audit)
+    step_fn = jax.checkpoint(chunk_step) if cfg.remat else chunk_step
+    hlast, y = scan_or_unroll(
+        step_fn, h0,
+        (xi_c.transpose(1, 0, 2, 3), dt_c.transpose(1, 0, 2, 3),
+         B_c.transpose(1, 0, 2, 3), C_c.transpose(1, 0, 2, 3)),
+        unroll=cfg.unroll)
+    y = y.transpose(1, 0, 2, 3).reshape(B, L, di)
+    y = y + xi.astype(f32) * p["D"].astype(f32)
+    y = y * jax.nn.silu(z.astype(f32))
+    out = x + (y.astype(x.dtype) @ p["out_proj"])
+    if return_state:
+        return out, (hlast, conv_state)
+    return out
+
+
+def mamba1_decode(x, p, cfg, state):
+    """Single-token step.  x (B, 1, d); state = (h (B,di,N), conv (B,W-1,di))."""
+    h0, conv_state = state
+    return mamba1_seq(x, p, cfg, h0=h0, conv_state=conv_state,
+                      return_state=True)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(loga):
+    """loga (..., c) -> (..., c, c) with out[i,j] = sum_{j<k<=i} loga[k]."""
+    c = loga.shape[-1]
+    cum = jnp.cumsum(loga, axis=-1)
+    dif = cum[..., :, None] - cum[..., None, :]               # sum_(j,i]
+    tri = np.tril(np.ones((c, c), bool))
+    return jnp.where(tri, dif, jnp.asarray(-jnp.inf, dif.dtype))
+
+
+def mamba2_seq(x, p, cfg, *, h0=None, conv_state=None, return_state=False):
+    """Mamba2 SSD over a sequence.  x (B, L, d) -> (B, L, d)."""
+    B, L, d = x.shape
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    Hs = di // P
+    h = rms_norm(x, p["ln"])
+    proj = h @ p["in_proj"]                                   # (B,L,2di+2N+Hs)
+    z, xi, Bm, Cm, dt_r = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    xi, conv_state = causal_conv(xi, p["conv_w"], p["conv_b"],
+                                 state=conv_state)
+    xi = jax.nn.silu(xi)
+    dt = jax.nn.softplus(dt_r.astype(f32) + p["dt_bias"])     # (B,L,Hs)
+    A = -jnp.exp(p["A_log"].astype(f32))                      # (Hs,)
+    loga = dt * A                                             # (B,L,Hs)
+
+    c = min(cfg.ssm_chunk, L)
+    while L % c:
+        c -= 1
+    nchunk = L // c
+    xh = xi.reshape(B, nchunk, c, Hs, P)
+    dtc = dt.reshape(B, nchunk, c, Hs)
+    logac = loga.reshape(B, nchunk, c, Hs)
+    Bc = Bm.reshape(B, nchunk, c, N).astype(f32)
+    Cc = Cm.reshape(B, nchunk, c, N).astype(f32)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, Hs, P, N), f32)
+
+    def chunk_step(hprev, args):
+        xk, dk, lak, Bk, Ck = args                            # (B,c,...)
+        # intra-chunk: masked decay-weighted "attention"
+        Lmat = jnp.exp(_segsum(lak.transpose(0, 2, 1)))       # (B,Hs,c,c)
+        scores = jnp.einsum("bin,bjn->bij", Ck, Bk)           # (B,c,c)
+        M = scores[:, None] * Lmat                            # (B,Hs,c,c)
+        xdt = xk.astype(f32) * dk[..., None]                  # (B,c,Hs,P)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", M, xdt)
+        # inter-chunk: contribution of carried state
+        pref = jnp.exp(jnp.cumsum(lak, axis=1))               # decay to pos i
+        y_inter = jnp.einsum("bin,bhpn->bihp", Ck, hprev) * pref[..., None]
+        # state update: decay-to-end weighted outer products
+        total = pref[:, -1]                                   # (B,Hs)
+        suff = total[:, None] / jnp.maximum(pref, 1e-37)      # exp(sum_(i,L])
+        hnew = total[..., None, None] * hprev + jnp.einsum(
+            "bin,bihp,bih->bhpn", Bk, xdt, suff)
+        return hnew, y_intra + y_inter
+
+    step_fn = jax.checkpoint(chunk_step) if cfg.remat else chunk_step
+    hlast, y = scan_or_unroll(
+        step_fn, h0,
+        (xh.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+         logac.transpose(1, 0, 2, 3), Bc.transpose(1, 0, 2, 3),
+         Cc.transpose(1, 0, 2, 3)),
+        unroll=cfg.unroll)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, L, di)
+    y = y + xi.astype(f32) * jnp.repeat(p["D"].astype(f32), P)
+    y = rms_norm(y.astype(x.dtype), p["out_ln"]) * jax.nn.silu(z)
+    out = x + y.astype(x.dtype) @ p["out_proj"]
+    if return_state:
+        return out, (hlast, conv_state)
+    return out
+
+
+def mamba2_decode(x, p, cfg, state):
+    h0, conv_state = state
+    return mamba2_seq(x, p, cfg, h0=h0, conv_state=conv_state,
+                      return_state=True)

@@ -1,0 +1,2 @@
+"""AdamW (+ FRSZ2-compressed optimizer state, compressed grad collectives)."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, lr_at

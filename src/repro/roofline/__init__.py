@@ -1,0 +1,8 @@
+"""Dry-run roofline: cost_analysis + HLO collective parsing -> 3 terms."""
+from repro.roofline.analysis import (
+    HW_V5E,
+    RooflineReport,
+    analyze_compiled,
+    collective_bytes,
+    model_flops_for,
+)

@@ -1,0 +1,2 @@
+"""GMRES(m) / CB-GMRES with Accessor-backed compressed Krylov basis."""
+from repro.solver.gmres import GmresResult, cb_gmres, gmres

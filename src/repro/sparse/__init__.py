@@ -1,0 +1,3 @@
+"""Sparse formats (CSR/ELL) and the synthetic CFD problem suite."""
+from repro.sparse.csr import CSR, ELL, csr_from_coo
+from repro.sparse.problems import PROBLEMS, make_problem, problem_suite, rhs_for

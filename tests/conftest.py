@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# f64 needed by the paper-faithful solver tests; harmless elsewhere.
+# NOTE: no XLA_FLAGS device-count override here — tests run on the real
+# single CPU device; only launch/dryrun.py creates the 512 fake devices.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

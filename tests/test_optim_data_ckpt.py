@@ -1,0 +1,153 @@
+"""Optimizer (incl. FRSZ2-compressed state), data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.data import GlobalBatchSpec
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _quadratic_params(key):
+    return {"w": jax.random.normal(key, (256,)),
+            "b": jnp.zeros((8, 128))}
+
+
+def _quadratic_grads(params, target):
+    return jax.grad(lambda p: sum(
+        jnp.sum(jnp.square(x - t)) for x, t in zip(
+            jax.tree.leaves(p), jax.tree.leaves(target))))(params)
+
+
+def test_adamw_descends():
+    key = jax.random.PRNGKey(0)
+    params = _quadratic_params(key)
+    target = jax.tree.map(jnp.ones_like, params)
+    cfg = AdamWConfig(peak_lr=0.05, warmup_steps=1, decay_steps=100,
+                      weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    loss0 = float(sum(jnp.sum(jnp.square(x - t)) for x, t in zip(
+        jax.tree.leaves(params), jax.tree.leaves(target))))
+    for _ in range(60):
+        g = _quadratic_grads(params, target)
+        params, state, stats = adamw_update(g, state, params, cfg)
+    loss1 = float(sum(jnp.sum(jnp.square(x - t)) for x, t in zip(
+        jax.tree.leaves(params), jax.tree.leaves(target))))
+    assert loss1 < loss0 * 0.05
+
+
+def test_compressed_adam_tracks_uncompressed():
+    """FRSZ2-compressed m/v (the paper's format on optimizer state) stays
+    within a small trajectory distance of exact Adam."""
+    key = jax.random.PRNGKey(1)
+    params = _quadratic_params(key)
+    target = jax.tree.map(jnp.ones_like, params)
+    plain = AdamWConfig(peak_lr=0.05, warmup_steps=1, decay_steps=100,
+                        weight_decay=0.0)
+    comp = AdamWConfig(peak_lr=0.05, warmup_steps=1, decay_steps=100,
+                       weight_decay=0.0, compress_state=True)
+    def loss_of(p):
+        return float(sum(jnp.sum(jnp.square(x - t)) for x, t in zip(
+            jax.tree.leaves(p), jax.tree.leaves(target))))
+
+    p1, s1 = params, adamw_init(params, plain)
+    p2, s2 = params, adamw_init(params, comp)
+    loss0 = loss_of(params)
+    for _ in range(40):
+        p1, s1, _ = adamw_update(_quadratic_grads(p1, target), s1, p1, plain)
+        p2, s2, _ = adamw_update(_quadratic_grads(p2, target), s2, p2, comp)
+    # both optimize comparably (trajectories diverge pointwise — Adam is
+    # not contractive — but convergence quality must match)
+    l1, l2 = loss_of(p1), loss_of(p2)
+    assert l1 < loss0 * 0.05 and l2 < loss0 * 0.05, (l1, l2, loss0)
+    assert l2 < loss0 * 0.1
+
+
+def test_compressed_state_smaller():
+    params = {"w": jnp.zeros((4096,))}
+    comp = AdamWConfig(compress_state=True)
+    state = adamw_init(params, comp)
+    m = state["m"]["w"]
+    assert m.codes.dtype == jnp.uint16
+    assert m.nbytes() < 4096 * 4 * 0.6
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_determinism_and_sharding():
+    spec = GlobalBatchSpec(seed=3, seq_len=32, global_batch=8, vocab=1000)
+    g1 = spec.global_batch_at(5)
+    g2 = spec.global_batch_at(5)
+    np.testing.assert_array_equal(g1, g2)
+    assert g1.shape == (8, 33)
+    assert (g1 >= 0).all() and (g1 < 1000).all()
+    assert not np.array_equal(g1, spec.global_batch_at(6))
+
+
+def test_data_process_shards_disjoint_union():
+    spec = GlobalBatchSpec(seed=3, seq_len=16, global_batch=8, vocab=100)
+    parts = [spec.local_batch(2, i, 4) for i in range(4)]
+    assert all(p.shape == (2, 17) for p in parts)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree(key):
+    return {"a": jax.random.normal(key, (32, 16)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+            "scalar": jnp.float32(3.5)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree(jax.random.PRNGKey(0))
+    save(str(tmp_path), 10, t)
+    step, back = restore(str(tmp_path), jax.tree.map(np.asarray, t))
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    t = _tree(jax.random.PRNGKey(0))
+    for s in (1, 2, 3, 4, 5):
+        save(str(tmp_path), s, t, keep=2)
+    assert latest_step(str(tmp_path)) == 5
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    t = _tree(jax.random.PRNGKey(0))
+    save(str(tmp_path), 7, t)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree(jax.random.PRNGKey(1))
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    ck.save(1, t)
+    ck.save(2, t)         # waits for the first
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore onto explicit (single-device) shardings — the elastic path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    t = _tree(jax.random.PRNGKey(2))
+    save(str(tmp_path), 3, t)
+    sh = jax.tree.map(lambda x: NamedSharding(mesh, P()), t)
+    step, back = restore(str(tmp_path), t, shardings=sh)
+    assert step == 3
+    assert all(b.sharding == NamedSharding(mesh, P())
+               for b in jax.tree.leaves(back))

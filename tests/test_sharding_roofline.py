@@ -1,0 +1,129 @@
+"""Sharding rules, accessor formats, roofline HLO parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core.accessor import BasisAccessor, format_by_name
+from repro.dist.sharding import logical_axes, mesh_rules
+from repro.launch.specs import abstract_params
+from repro.roofline.analysis import (
+    _shape_bytes,
+    collective_bytes,
+    parse_hlo_defs,
+)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_logical_axes_cover_every_param(name):
+    cfg = ARCHS[name]
+    params = abstract_params(cfg)
+    axes = logical_axes(params)
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_a)
+    for (path, leaf), ax in zip(flat_p, flat_a):
+        assert len(ax) == leaf.ndim, (path, ax, leaf.shape)
+    # the big 2-D weights must be sharded on at least one axis
+    for (path, leaf), ax in zip(flat_p, flat_a):
+        if leaf.ndim >= 2 and int(np.prod(leaf.shape)) > 1e6:
+            assert any(a is not None for a in ax), (path, ax)
+
+
+def test_mesh_rules_divisibility():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    r_mix = mesh_rules(ARCHS["mixtral-8x22b"], FakeMesh())
+    assert r_mix["experts"] is None          # 8 experts, 16-way model axis
+    assert r_mix["mlp"] == "model"
+    r_l4 = mesh_rules(ARCHS["llama4-scout-17b-a16e"], FakeMesh())
+    assert r_l4["experts"] == "model"        # 16 experts shard as EP
+    assert r_l4["mlp"] is None
+    r_gran = mesh_rules(ARCHS["granite-20b"], FakeMesh())
+    assert r_gran["kv_heads"] is None        # MQA: 1 kv head
+    assert r_gran["heads"] == "model"
+
+
+@pytest.mark.parametrize("fmt_name", ["float64", "float32", "bfloat16",
+                                      "frsz2_32", "frsz2_16"])
+def test_accessor_contract(fmt_name, rng):
+    m, n = 6, 256
+    fmt = format_by_name(fmt_name, arith_dtype=jnp.float64, bs=32)
+    acc = BasisAccessor(fmt=fmt, m=m, n=n, arith_dtype=jnp.float64)
+    store = acc.empty()
+    V = rng.standard_normal((m, n))
+    for j in range(m):
+        store = acc.write_row(store, j, jnp.asarray(V[j]))
+    Vr = np.asarray(acc.read_all(store))
+    tol = {"float64": 1e-15, "float32": 1e-6, "bfloat16": 1e-2,
+           "frsz2_32": 1e-7, "frsz2_16": 1e-2}[fmt_name]
+    scale = np.abs(V).max()
+    assert np.abs(Vr - V).max() / scale < tol
+    # masked dots == dense reference on the roundtripped basis
+    w = rng.standard_normal(n)
+    mask = jnp.arange(m) < 4
+    h = np.asarray(acc.dots(store, jnp.asarray(w), mask))
+    want = Vr @ w
+    want[4:] = 0
+    np.testing.assert_allclose(h, want, rtol=1e-6, atol=1e-8)
+    y = np.asarray(acc.combine(store, jnp.asarray(np.ones(m)), mask))
+    np.testing.assert_allclose(y, Vr[:4].sum(0), rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parsing
+# ---------------------------------------------------------------------------
+
+HLO = """
+HloModule test
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %c = f32[64,128]{1,0} add(%ag, %ag)
+  %ar = f32[64,128]{1,0} all-reduce(%c), to_apply=%add
+  %t = (f32[16,128]{1,0}, f32[16,128]{1,0}) all-to-all(%p0, %p0), dimensions={0}
+  ROOT %out = f32[16,128]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("(f32[2,2]{1,0}, u8[4]{0})") == 16 + 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 16 * 128 * 4           # operand p0
+    assert out["all-reduce"] == 64 * 128 * 4           # operand c
+    assert out["all-to-all"] == 2 * 16 * 128 * 4       # two operands
+    assert out["collective-permute"] == 16 * 128 * 4
+
+
+def test_parse_defs_tuple_types():
+    defs = parse_hlo_defs(HLO)
+    assert defs["t"].startswith("(")
+    assert _shape_bytes(defs["t"]) == 2 * 16 * 128 * 4
+
+
+@given(st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_batch_axes_divisibility(dp, b_pow):
+    from repro.dist.sharding import batch_axes
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": dp, "model": 2}
+
+    B = 2 ** b_pow
+    axes = batch_axes(FakeMesh(), B)
+    size = 1
+    for a in axes:
+        size *= FakeMesh.shape[a]
+    assert B % size == 0

@@ -1,0 +1,66 @@
+"""End-to-end behaviour: train with checkpoint/restart, serve, solve."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.train import TrainConfig, train
+from repro.launch.serve import ServeConfig, serve
+from repro.optim import AdamWConfig
+
+
+def _tiny(arch="yi-9b"):
+    cfg = get_arch(arch).reduced()
+    return dataclasses.replace(cfg, num_layers=2, d_model=128, d_ff=256,
+                               vocab_size=256, num_heads=2, num_kv_heads=1,
+                               head_dim=0)
+
+
+def test_train_loss_decreases_and_resumes(tmp_path):
+    cfg = _tiny()
+    opt = AdamWConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=30,
+                      weight_decay=0.0)
+    tc = TrainConfig(steps=12, global_batch=4, seq_len=64,
+                     ckpt_dir=str(tmp_path), ckpt_every=5, log_every=100)
+    _, hist = train(cfg, opt, tc, verbose=False)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    # restart: resumes from step 10 checkpoint, not from scratch
+    tc2 = dataclasses.replace(tc, steps=14)
+    _, hist2 = train(cfg, opt, tc2, verbose=False)
+    assert hist2[0]["step"] == 10
+    assert hist2[-1]["step"] == 13
+
+
+def test_train_with_compressed_optimizer(tmp_path):
+    cfg = _tiny()
+    opt = AdamWConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=20,
+                      weight_decay=0.0, compress_state=True)
+    tc = TrainConfig(steps=6, global_batch=4, seq_len=64,
+                     ckpt_dir=str(tmp_path / "c"), ckpt_every=0,
+                     log_every=100)
+    _, hist = train(cfg, opt, tc, verbose=False)
+    assert np.isfinite(hist[-1]["loss"])
+    assert hist[-1]["loss"] < hist[0]["loss"] * 1.2
+
+
+def test_serve_batched_requests():
+    cfg = _tiny()
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+            for _ in range(6)]
+    sc = ServeConfig(slots=3, prompt_len=16, max_new=8, max_ctx=32)
+    out = serve(cfg, sc, reqs, verbose=False)
+    assert len(out) == 6
+    assert all(len(v) >= 8 for v in out.values())
+    assert all(0 <= t < cfg.vocab_size for v in out.values() for t in v)
+
+
+def test_solver_cli_suite():
+    from repro.launch.solve import solve_suite
+    rows = solve_suite("synth:atmosmod", 512,
+                       ["float64", "frsz2_32"], m=30, verbose=False)
+    assert all(r["converged"] for r in rows)
+    by = {r["format"]: r for r in rows}
+    assert by["float64"]["iters"] <= by["frsz2_32"]["iters"] + 2
