@@ -1,0 +1,120 @@
+"""Driver-overhead microbench: host-looped vs device-resident GMRES.
+
+The paper's premise is that CB-GMRES is memory-bandwidth-bound; any
+per-restart host round-trip (pulling the residual-estimate vector,
+``float()`` conversions, re-dispatching the next cycle) is pure overhead
+on top of that.  This benchmark times the *same solve* under both drivers:
+
+  host    — the seed driver: python ``while`` loop, one device sync +
+            ``np.asarray(est)`` per restart cycle;
+  device  — the restart loop inside one jitted ``lax.while_loop``
+            (``driver="device"``), with a single host pull at the end.
+
+For each (format, driver) cell we report cold (first call: trace+compile)
+and warm (steady-state) wall time; the headline number is the warm-solve
+speedup.  A `--batch k` column additionally amortizes one device program
+over k right-hand sides via ``gmres_batched``.
+
+  PYTHONPATH=src python benchmarks/driver_overhead.py \
+      --problem synth:atmosmod --n 8000 --formats float64,float32,frsz2_32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.solver import gmres  # noqa: E402
+from repro.solver.gmres import gmres_batched  # noqa: E402
+from repro.sparse import make_problem, rhs_for  # noqa: E402
+
+
+def _time(fn, repeats: int):
+    cold_t0 = time.time()
+    res = fn()
+    cold = time.time() - cold_t0
+    warm = []
+    for _ in range(repeats):
+        t0 = time.time()
+        res = fn()
+        warm.append(time.time() - t0)
+    return cold, min(warm), res
+
+
+def run(problem: str, n: int, formats: list[str], *, m: int, target_rrn,
+        max_iters: int, repeats: int, batch: int):
+    A, rrn = make_problem(problem, n)
+    if target_rrn is not None:
+        rrn = target_rrn
+    b, _ = rhs_for(A)
+    rows = []
+    print(f"{problem} n={A.shape[0]} m={m} target_rrn={rrn:.1e} "
+          f"repeats={repeats}")
+    hdr = (f"{'format':10s} {'iters':>6s} {'host cold':>10s} "
+           f"{'host warm':>10s} {'dev cold':>9s} {'dev warm':>9s} "
+           f"{'speedup':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for fmt in formats:
+        hc, hw, rh = _time(
+            lambda: gmres(A, b, storage=fmt, m=m, max_iters=max_iters,
+                          target_rrn=rrn, driver="host"), repeats)
+        dc, dw, rd = _time(
+            lambda: gmres(A, b, storage=fmt, m=m, max_iters=max_iters,
+                          target_rrn=rrn, driver="device"), repeats)
+        assert rh.iterations == rd.iterations, (
+            "driver parity violated", fmt, rh.iterations, rd.iterations)
+        row = dict(problem=problem, n=n, format=fmt, m=m,
+                   iters=rd.iterations, converged=bool(rd.converged),
+                   host_cold_s=hc, host_warm_s=hw,
+                   device_cold_s=dc, device_warm_s=dw,
+                   speedup_warm=hw / dw)
+        if batch > 1:
+            B = jnp.stack([b] + [
+                b * (1 + 0.1 * i) for i in range(1, batch)])
+            bc, bw, _ = _time(
+                lambda: gmres_batched(A, B, storage=fmt, m=m,
+                                      max_iters=max_iters, target_rrn=rrn),
+                repeats)
+            row.update(batch=batch, batch_warm_s=bw,
+                       batch_warm_per_solve_s=bw / batch)
+        rows.append(row)
+        print(f"{fmt:10s} {row['iters']:6d} {hc:10.3f} {hw:10.3f} "
+              f"{dc:9.3f} {dw:9.3f} {row['speedup_warm']:7.2f}x"
+              + (f"  [batch {batch}: {row['batch_warm_per_solve_s']:.3f}"
+                 "s/solve]" if batch > 1 else ""))
+    wins = [r for r in rows if r["speedup_warm"] > 1.0]
+    print(f"\ndevice-resident wins {len(wins)}/{len(rows)} formats "
+          f"(geomean speedup "
+          f"{float(jnp.exp(jnp.mean(jnp.log(jnp.asarray([r['speedup_warm'] for r in rows]))))):.2f}x)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--problem", default="synth:atmosmod")
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--formats", default="float64,float32,frsz2_32")
+    ap.add_argument("--m", type=int, default=50)
+    ap.add_argument("--target-rrn", type=float, default=1e-10)
+    ap.add_argument("--max-iters", type=int, default=2000)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    rows = run(args.problem, args.n, args.formats.split(","), m=args.m,
+               target_rrn=args.target_rrn, max_iters=args.max_iters,
+               repeats=args.repeats, batch=args.batch)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

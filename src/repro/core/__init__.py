@@ -19,6 +19,9 @@ from repro.core.frsz2 import (
 from repro.core.accessor import (
     BasisAccessor,
     FrszFormat,
+    MixedFormat,
     NativeFormat,
+    StorageFormat,
     format_by_name,
+    register_format,
 )

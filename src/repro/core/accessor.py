@@ -14,19 +14,34 @@ and exposes exactly the operations CB-GMRES needs (paper Fig. 1):
   * ``dots(store, w)``           — ``V @ w``      (orthogonalization, step 4)
   * ``combine(store, h)``        — ``h @ V``      (update / solution, steps 4+17)
 
-``dots``/``combine`` are the two memory-bound hot loops; for FRSZ2 storage
-they dispatch to the fused decompress-dot Pallas kernels
-(``repro.kernels.frsz2_dot``) so codes are expanded in-register.  All
-arithmetic is performed in ``arith_dtype`` regardless of storage.
+Storage-format protocol
+-----------------------
 
-Storage formats are small frozen dataclasses so they can be static args to
-jit and live inside pytree aux data.
+Every storage format is a small frozen dataclass implementing
+:class:`StorageFormat`.  The accessor performs **no** dispatch on concrete
+format classes: each format owns its full read/write/dot path, including any
+kernel routing (``FrszFormat`` sends ``dots``/``combine`` through the fused
+decompress-dot Pallas kernels in ``repro.kernels.frsz2_dot`` so codes are
+expanded in-register).  All arithmetic is performed in ``arith_dtype``
+regardless of storage.  Formats are frozen dataclasses so they can be static
+args to jit and live inside pytree aux data.
+
+Adding a new storage format takes two steps:
+
+1. subclass :class:`StorageFormat` and implement ``empty`` / ``write_row`` /
+   ``read_row`` / ``read_all`` / ``nbytes`` (``dots``/``combine`` have
+   generic read_all-based defaults you can override with a fused path);
+2. register a builder in the :data:`FORMATS` table with
+   :func:`register_format` — either under an exact name (``"float64"``) or
+   under a family prefix (``"frsz2"`` matches ``frsz2_32``, ``frsz2_16``, …).
+
+``format_by_name`` resolves names through that one table; nothing else in
+the solver stack needs to change.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -35,21 +50,85 @@ import numpy as np
 from repro.core import frsz2 as F
 
 __all__ = [
+    "StorageFormat",
     "NativeFormat",
     "FrszFormat",
+    "MixedFormat",
     "BasisAccessor",
+    "register_format",
     "format_by_name",
     "FORMATS",
 ]
 
 
 # ---------------------------------------------------------------------------
-# Storage formats
+# Storage-format protocol
+# ---------------------------------------------------------------------------
+
+
+class StorageFormat:
+    """Protocol + generic defaults for Krylov-basis storage formats.
+
+    A format stores an ``(m, n)`` row basis in an arbitrary representation
+    (its *store*, any pytree of arrays) and answers the four Accessor
+    operations.  ``read_row``/``read_all`` take the arithmetic dtype and the
+    logical row length ``n`` (stores may be block-padded beyond ``n``).
+
+    ``dots``/``combine`` are the two memory-bound hot loops.  The defaults
+    below materialize the basis via ``read_all``; formats with a fused
+    decompress-dot path (e.g. :class:`FrszFormat` with ``use_kernels``)
+    override them.  Row masking is applied by :class:`BasisAccessor`, not by
+    formats.
+    """
+
+    # -- identity / accounting ------------------------------------------------
+    @property
+    def name(self) -> str:  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def bits_per_value(self) -> float:  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def nbytes(self, m: int, n: int) -> int:  # pragma: no cover
+        raise NotImplementedError
+
+    # -- store management -----------------------------------------------------
+    def empty(self, m: int, n: int):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def rows(self, store) -> int:
+        """Row capacity of ``store`` (static)."""
+        return jax.tree.leaves(store)[0].shape[0]
+
+    # -- element access -------------------------------------------------------
+    def write_row(self, store, j, v):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def read_row(self, store, j, arith_dtype, n: int):  # pragma: no cover
+        raise NotImplementedError
+
+    def read_all(self, store, arith_dtype, n: int):  # pragma: no cover
+        raise NotImplementedError
+
+    # -- hot loops (generic defaults) ----------------------------------------
+    def dots(self, store, w, arith_dtype, n: int):
+        """h = V @ w (unmasked)."""
+        V = self.read_all(store, arith_dtype, n)
+        return V @ w.astype(arith_dtype)
+
+    def combine(self, store, h, arith_dtype, n: int):
+        """y = h @ V (unmasked)."""
+        V = self.read_all(store, arith_dtype, n)
+        return h.astype(arith_dtype) @ V
+
+
+# ---------------------------------------------------------------------------
+# Concrete formats
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
-class NativeFormat:
+class NativeFormat(StorageFormat):
     """Plain cast-to-dtype storage (CB-GMRES float64/float32/float16 modes)."""
 
     dtype: Any = jnp.float32
@@ -61,17 +140,16 @@ class NativeFormat:
     def bits_per_value(self) -> float:
         return jnp.dtype(self.dtype).itemsize * 8
 
-    # -- whole-array codec ---------------------------------------------------
     def empty(self, m: int, n: int):
         return jnp.zeros((m, n), self.dtype)
 
     def write_row(self, store, j, v):
         return store.at[j].set(v.astype(self.dtype))
 
-    def read_row(self, store, j, arith_dtype):
+    def read_row(self, store, j, arith_dtype, n: int):
         return store[j].astype(arith_dtype)
 
-    def read_all(self, store, arith_dtype):
+    def read_all(self, store, arith_dtype, n: int):
         return store.astype(arith_dtype)
 
     def nbytes(self, m: int, n: int) -> int:
@@ -79,7 +157,7 @@ class NativeFormat:
 
 
 @dataclasses.dataclass(frozen=True)
-class FrszFormat:
+class FrszFormat(StorageFormat):
     """FRSZ2 block-compressed storage (the paper's contribution).
 
     ``use_kernels`` routes ``dots``/``combine`` through the fused Pallas
@@ -110,6 +188,9 @@ class FrszFormat:
         exps = jnp.zeros((m, nb), spec.exp_dtype)
         return {"codes": codes, "exps": exps}
 
+    def rows(self, store) -> int:
+        return store["codes"].shape[0]
+
     def write_row(self, store, j, v):
         bc = F.compress(v.astype(self.spec.dtype), self.spec)
         return {
@@ -122,26 +203,131 @@ class FrszFormat:
             codes=store["codes"], exps=store["exps"], n=n, spec=self.spec
         )
 
-    def read_row(self, store, j, arith_dtype, n=None):
+    def read_row(self, store, j, arith_dtype, n: int):
         spec = self.spec
-        nbs = store["codes"].shape[-2] * spec.bs
         bc = F.BlockCompressed(
             codes=store["codes"][j][None], exps=store["exps"][j][None],
-            n=nbs if n is None else n, spec=spec,
+            n=n, spec=spec,
         )
         return F.decompress(bc)[0].astype(arith_dtype)
 
-    def read_all(self, store, arith_dtype, n=None):
-        spec = self.spec
-        nbs = store["codes"].shape[-2] * spec.bs
-        bc = F.BlockCompressed(
-            codes=store["codes"], exps=store["exps"],
-            n=nbs if n is None else n, spec=spec,
-        )
-        return F.decompress(bc).astype(arith_dtype)
+    def read_all(self, store, arith_dtype, n: int):
+        return F.decompress(self._as_bc(store, n)).astype(arith_dtype)
+
+    def dots(self, store, w, arith_dtype, n: int):
+        if self.use_kernels:
+            from repro.kernels import ops as kops
+
+            bc = self._as_bc(store, n)
+            return kops.matvec(bc, w.astype(self.spec.dtype)).astype(arith_dtype)
+        return super().dots(store, w, arith_dtype, n)
+
+    def combine(self, store, h, arith_dtype, n: int):
+        if self.use_kernels:
+            from repro.kernels import ops as kops
+
+            bc = self._as_bc(store, n)
+            return kops.rmatvec(bc, h.astype(self.spec.dtype)).astype(arith_dtype)
+        return super().combine(store, h, arith_dtype, n)
 
     def nbytes(self, m: int, n: int) -> int:
         return m * F.storage_nbytes(n, self.spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedFormat(StorageFormat):
+    """Mixed-precision basis: first ``k`` rows in ``head``, rest in ``tail``.
+
+    The classic CB-GMRES accuracy hedge: early Krylov vectors carry most of
+    the solution's signal, so keeping the first few in full precision while
+    compressing the (many) later ones recovers nearly-f64 convergence at
+    nearly-compressed bandwidth.  Enabled purely by the format protocol —
+    the accessor and solver are unchanged.
+
+    The store is ``{"head": head_store(k rows), "tail": tail_store(m-k)}``;
+    row ``j`` routes to head iff ``j < k`` (jit-safe via ``lax.cond`` — ``j``
+    may be a traced index inside the Arnoldi ``fori_loop``).
+    """
+
+    k: int = 2
+    head: StorageFormat = NativeFormat(jnp.float64)
+    tail: StorageFormat = FrszFormat(F.FRSZ2_32)
+
+    @property
+    def name(self) -> str:
+        return f"mixed:{self.k}:{self.tail.name}"
+
+    def bits_per_value(self) -> float:
+        # amortized over a large basis the tail dominates; nbytes() is exact
+        return self.tail.bits_per_value()
+
+    def _split(self, m: int) -> tuple[int, int]:
+        kh = min(self.k, m)
+        return kh, m - kh
+
+    def empty(self, m: int, n: int):
+        kh, kt = self._split(m)
+        return {"head": self.head.empty(kh, n), "tail": self.tail.empty(kt, n)}
+
+    def rows(self, store) -> int:
+        return self.head.rows(store["head"]) + self.tail.rows(store["tail"])
+
+    def write_row(self, store, j, v):
+        kh = self.head.rows(store["head"])
+        kt = self.tail.rows(store["tail"])
+
+        def wh(s):
+            jj = jnp.clip(j, 0, max(kh - 1, 0))
+            return {"head": self.head.write_row(s["head"], jj, v),
+                    "tail": s["tail"]}
+
+        def wt(s):
+            jj = jnp.clip(j - kh, 0, max(kt - 1, 0))
+            return {"head": s["head"],
+                    "tail": self.tail.write_row(s["tail"], jj, v)}
+
+        if kt == 0:
+            return wh(store)
+        if kh == 0:
+            return wt(store)
+        return jax.lax.cond(j < kh, wh, wt, store)
+
+    def read_row(self, store, j, arith_dtype, n: int):
+        kh = self.head.rows(store["head"])
+        kt = self.tail.rows(store["tail"])
+
+        def rh(s):
+            jj = jnp.clip(j, 0, max(kh - 1, 0))
+            return self.head.read_row(s["head"], jj, arith_dtype, n)
+
+        def rt(s):
+            jj = jnp.clip(j - kh, 0, max(kt - 1, 0))
+            return self.tail.read_row(s["tail"], jj, arith_dtype, n)
+
+        if kt == 0:
+            return rh(store)
+        if kh == 0:
+            return rt(store)
+        return jax.lax.cond(j < kh, rh, rt, store)
+
+    def read_all(self, store, arith_dtype, n: int):
+        return jnp.concatenate(
+            [self.head.read_all(store["head"], arith_dtype, n),
+             self.tail.read_all(store["tail"], arith_dtype, n)], axis=0)
+
+    def dots(self, store, w, arith_dtype, n: int):
+        return jnp.concatenate(
+            [self.head.dots(store["head"], w, arith_dtype, n),
+             self.tail.dots(store["tail"], w, arith_dtype, n)], axis=0)
+
+    def combine(self, store, h, arith_dtype, n: int):
+        kh = self.head.rows(store["head"])
+        return (self.head.combine(store["head"], h[:kh], arith_dtype, n)
+                + self.tail.combine(store["tail"], h[kh:], arith_dtype, n))
+
+    def nbytes(self, m: int, n: int) -> int:
+        kh, kt = self._split(m)
+        return self.head.nbytes(kh, n) + self.tail.nbytes(kt, n)
 
 
 # ---------------------------------------------------------------------------
@@ -156,6 +342,11 @@ class BasisAccessor:
     All four operations are jit-compatible (store is a pytree; j may be a
     traced index).  ``dots``/``combine`` accept a row mask so a growing
     Krylov basis can live in a fixed buffer under ``lax.fori_loop``.
+
+    The accessor is format-agnostic: every operation delegates to the
+    :class:`StorageFormat` protocol, and masking (the only accessor-level
+    concern) is applied here — *after* the format's ``dots`` and *before*
+    its ``combine`` so fused kernel paths see unmasked inputs.
     """
 
     fmt: Any
@@ -170,26 +361,15 @@ class BasisAccessor:
         return self.fmt.write_row(store, j, v)
 
     def read_row(self, store, j):
-        if isinstance(self.fmt, FrszFormat):
-            return self.fmt.read_row(store, j, self.arith_dtype, self.n)
-        return self.fmt.read_row(store, j, self.arith_dtype)
+        return self.fmt.read_row(store, j, self.arith_dtype, self.n)
 
     def read_all(self, store):
-        if isinstance(self.fmt, FrszFormat):
-            return self.fmt.read_all(store, self.arith_dtype, self.n)
-        return self.fmt.read_all(store, self.arith_dtype)
+        return self.fmt.read_all(store, self.arith_dtype, self.n)
 
     # -- hot loops ------------------------------------------------------------
     def dots(self, store, w, row_mask=None):
         """h = V @ w, masked rows zeroed.  (Orthogonalization dot products.)"""
-        if isinstance(self.fmt, FrszFormat) and self.fmt.use_kernels:
-            from repro.kernels import ops as kops
-
-            bc = self.fmt._as_bc(store, self.n)
-            h = kops.matvec(bc, w.astype(self.fmt.spec.dtype)).astype(self.arith_dtype)
-        else:
-            V = self.read_all(store)
-            h = V @ w.astype(self.arith_dtype)
+        h = self.fmt.dots(store, w, self.arith_dtype, self.n)
         if row_mask is not None:
             h = jnp.where(row_mask, h, 0.0)
         return h
@@ -198,15 +378,7 @@ class BasisAccessor:
         """y = h @ V, masked rows excluded.  (Basis update / solution build.)"""
         if row_mask is not None:
             h = jnp.where(row_mask, h, 0.0)
-        if isinstance(self.fmt, FrszFormat) and self.fmt.use_kernels:
-            from repro.kernels import ops as kops
-
-            bc = self.fmt._as_bc(store, self.n)
-            return kops.rmatvec(bc, h.astype(self.fmt.spec.dtype)).astype(
-                self.arith_dtype
-            )
-        V = self.read_all(store)
-        return h.astype(self.arith_dtype) @ V
+        return self.fmt.combine(store, h, self.arith_dtype, self.n)
 
     def nbytes(self) -> int:
         return self.fmt.nbytes(self.m, self.n)
@@ -216,26 +388,71 @@ class BasisAccessor:
 # Registry (benchmarks / CLI select formats by name)
 # ---------------------------------------------------------------------------
 
+#: One table: exact names ("float64") and family prefixes ("frsz2", "mixed",
+#: "emul") map to builders ``(name, *, arith_dtype, bs, use_kernels,
+#: rounding) -> StorageFormat``.  ``format_by_name`` consults nothing else.
+FORMATS: dict[str, Callable[..., StorageFormat]] = {}
 
-def _f(dtype):
-    return NativeFormat(dtype=dtype)
+
+def register_format(key: str):
+    """Register a format builder under an exact name or family prefix."""
+
+    def deco(builder):
+        FORMATS[key] = builder
+        return builder
+
+    return deco
 
 
-FORMATS = {
-    "float64": _f(jnp.float64),
-    "float32": _f(jnp.float32),
-    "float16": _f(jnp.float16),
-    "bfloat16": _f(jnp.bfloat16),
-}
+def _native_builder(dtype):
+    def build(name, **ctx):
+        return NativeFormat(dtype=dtype)
+
+    return build
+
+
+for _dt in (jnp.float64, jnp.float32, jnp.float16, jnp.bfloat16):
+    register_format(jnp.dtype(_dt).name)(_native_builder(_dt))
+
+
+@register_format("frsz2")
+def _build_frsz2(name, *, arith_dtype=jnp.float64, bs=32, use_kernels=False,
+                 rounding="truncate", **ctx):
+    l = int(name.split("_")[1])
+    spec = F.FrszSpec(bs=bs, l=l, dtype=arith_dtype, rounding=rounding)
+    return FrszFormat(spec=spec, use_kernels=use_kernels)
+
+
+@register_format("mixed")
+def _build_mixed(name, *, arith_dtype=jnp.float64, **ctx):
+    # "mixed" | "mixed:<k>" | "mixed:<k>:<tail-format-name>"
+    parts = name.split(":")
+    k = int(parts[1]) if len(parts) > 1 and parts[1] else 2
+    tail_name = parts[2] if len(parts) > 2 else "frsz2_32"
+    tail = format_by_name(tail_name, arith_dtype=arith_dtype, **ctx)
+    return MixedFormat(k=k, head=NativeFormat(arith_dtype), tail=tail)
+
+
+@register_format("emul")
+def _build_emul(name, **ctx):
+    from repro.core.emulators import emulator_by_name
+
+    return emulator_by_name(name.partition(":")[2])
 
 
 def format_by_name(name: str, *, arith_dtype=jnp.float64, bs: int = 32,
                    use_kernels: bool = False, rounding: str = "truncate"):
-    """Resolve 'float64' / 'float32' / 'float16' / 'bfloat16' / 'frsz2_XX'."""
+    """Resolve a storage format from the :data:`FORMATS` table.
+
+    Exact names first ('float64', …), then family prefixes: 'frsz2_XX',
+    'mixed[:k[:tail]]', 'emul:…'.
+    """
+    ctx = dict(arith_dtype=arith_dtype, bs=bs, use_kernels=use_kernels,
+               rounding=rounding)
     if name in FORMATS:
-        return FORMATS[name]
-    if name.startswith("frsz2_"):
-        l = int(name.split("_")[1])
-        spec = F.FrszSpec(bs=bs, l=l, dtype=arith_dtype, rounding=rounding)
-        return FrszFormat(spec=spec, use_kernels=use_kernels)
+        return FORMATS[name](name, **ctx)
+    for sep in (":", "_"):
+        family = name.split(sep)[0]
+        if family != name and family in FORMATS:
+            return FORMATS[family](name, **ctx)
     raise ValueError(f"unknown storage format {name!r}")

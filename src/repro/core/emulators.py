@@ -36,13 +36,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.accessor import StorageFormat
+
 __all__ = ["AbsQuantFormat", "PwRelQuantFormat", "ZfpFixedRateFormat",
            "emulator_by_name"]
 
 
 @dataclasses.dataclass(frozen=True)
-class _RoundtripFormat:
-    """Base: stores roundtrip(x) at arithmetic precision (LibPressio style)."""
+class _RoundtripFormat(StorageFormat):
+    """Base: stores roundtrip(x) at arithmetic precision (LibPressio style).
+
+    Implements the :class:`~repro.core.accessor.StorageFormat` protocol;
+    ``dots``/``combine`` come from the generic read_all-based defaults.
+    """
 
     def roundtrip(self, x: jax.Array) -> jax.Array:  # pragma: no cover
         raise NotImplementedError
@@ -53,10 +59,10 @@ class _RoundtripFormat:
     def write_row(self, store, j, v):
         return store.at[j].set(self.roundtrip(v.astype(jnp.float64)))
 
-    def read_row(self, store, j, arith_dtype):
+    def read_row(self, store, j, arith_dtype, n: int):
         return store[j].astype(arith_dtype)
 
-    def read_all(self, store, arith_dtype):
+    def read_all(self, store, arith_dtype, n: int):
         return store.astype(arith_dtype)
 
     def nbytes(self, m: int, n: int) -> int:

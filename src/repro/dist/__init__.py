@@ -1,0 +1,43 @@
+"""Distribution layer: logical-axis sharding rules + compressed collectives.
+
+Three small modules:
+
+  act_sharding — scoped activation-sharding constraints: model code calls
+                 ``constrain(x, "batch", None, "heads", None)`` with
+                 *logical* names; a ``use(mesh, rules)`` context resolves
+                 them to mesh axes (no-op outside the context, so the same
+                 model runs unsharded).
+  sharding     — logical axes per parameter, mesh rules per architecture
+                 (EP vs TP arbitration, GQA head divisibility), batch-axis
+                 selection, and NamedSharding trees for params/caches.
+  collectives  — FRSZ2-compressed cross-pod gradient all-reduce
+                 (``compressed_pmean``) + wire-byte accounting.
+
+Also installs a ``jax.shard_map`` forward-compat shim on jax versions that
+only ship ``jax.experimental.shard_map`` (callers use the modern spelling
+with ``axis_names=…, check_vma=…``).
+"""
+from repro.dist import act_sharding, collectives, sharding
+from repro.dist.act_sharding import constrain
+from repro.dist.collectives import compressed_pmean, pmean_bytes
+from repro.dist.sharding import (
+    batch_axes,
+    cache_shardings,
+    logical_axes,
+    mesh_rules,
+    param_shardings,
+)
+
+__all__ = [
+    "act_sharding",
+    "collectives",
+    "sharding",
+    "constrain",
+    "compressed_pmean",
+    "pmean_bytes",
+    "batch_axes",
+    "cache_shardings",
+    "logical_axes",
+    "mesh_rules",
+    "param_shardings",
+]

@@ -1,0 +1,78 @@
+"""Scoped activation-sharding constraints over *logical* axis names.
+
+Model code annotates activations with logical names:
+
+    q = constrain(q, "batch", None, "heads", None)
+
+Outside a policy scope this is a no-op (the model runs on one device or
+under plain jit).  Inside ``use(mesh, rules)`` — entered by the cell
+builders in ``repro.launch.specs`` — each logical name is resolved through
+``rules`` (a dict ``logical-name -> mesh axis | tuple of axes | None``) and
+the array gets ``lax.with_sharding_constraint`` with the resulting
+``NamedSharding``.  Unknown names resolve to None (replicated) so model
+code never has to know which axes a given mesh actually has.
+
+The scope is a plain context manager around trace time: constraints bind
+when the step function is traced, which is exactly when specs/dryrun lower
+the cells.  Install also works under ``jax.shard_map`` tracing (the
+constraint is skipped there — shard_map already fixes the layout).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["constrain", "use", "current_policy"]
+
+_state = threading.local()
+
+
+def current_policy():
+    """(mesh, rules) of the innermost active scope, or None."""
+    stack = getattr(_state, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use(mesh, rules: dict):
+    """Activate an activation-sharding policy for the enclosed trace."""
+    stack = getattr(_state, "stack", None)
+    if stack is None:
+        stack = _state.stack = []
+    stack.append((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def _resolve(rules: dict, names):
+    spec = []
+    for nm in names:
+        ax = rules.get(nm) if nm is not None else None
+        spec.append(ax)
+    return P(*spec)
+
+
+def constrain(x, *names):
+    """Constrain ``x``'s sharding by logical axis names (one per dim).
+
+    No-op without an active :func:`use` scope.  ``names`` may be shorter
+    than ``x.ndim`` (trailing dims replicated).
+    """
+    pol = current_policy()
+    if pol is None:
+        return x
+    mesh, rules = pol
+    if len(names) < x.ndim:
+        names = tuple(names) + (None,) * (x.ndim - len(names))
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, _resolve(rules, names[: x.ndim]))
+        )
+    except ValueError:
+        # inside shard_map / incompatible tracer: layout is already fixed
+        return x

@@ -11,6 +11,15 @@ Layouts (wrappers in ops.py produce them):
   codes: (m, n)  one aligned code per element (uint8/16/32)
   exps:  (m, n // bs) int32
   x:     (n, 1)   /   h: (1, m)
+
+Reduction accuracy: when the contraction axis spans multiple grid tiles,
+partial dots are combined with **Kahan compensated summation** (a
+compensation term in VMEM scratch, output dtype) instead of plain ``+=`` —
+sequential f32
+tile accumulation loses ~2 bits per doubling of tile count, which was enough
+to push the f16-code matvec outside its oracle tolerance.  The ops.py
+wrappers additionally size tiles so common GMRES basis shapes reduce in a
+single MXU dot (bit-identical to the pure-jnp oracle).
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import frsz2 as F
 from repro.core.frsz2 import _decode_block
@@ -37,17 +47,24 @@ def _decode_tile(c_tile, e_tile, spec: F.FrszSpec):
 # ---------------------------------------------------------------------------
 
 
-def _matvec_kernel(c_ref, e_ref, x_ref, o_ref, *, spec: F.FrszSpec):
-    k = pl.program_id(1)
+def _kahan_accumulate(o_ref, comp_ref, part, k):
+    """o += part with a compensated carry; init both refs at tile k == 0."""
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
+        comp_ref[...] = jnp.zeros_like(comp_ref)
 
+    y = part.astype(o_ref.dtype) - comp_ref[...]
+    s = o_ref[...] + y
+    comp_ref[...] = (s - o_ref[...]) - y
+    o_ref[...] = s
+
+
+def _matvec_kernel(c_ref, e_ref, x_ref, o_ref, comp_ref, *, spec: F.FrszSpec):
     vals = _decode_tile(c_ref[...], e_ref[...], spec)
-    o_ref[...] += jnp.dot(
-        vals, x_ref[...], preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+    part = jnp.dot(vals, x_ref[...], preferred_element_type=jnp.float32)
+    _kahan_accumulate(o_ref, comp_ref, part, pl.program_id(1))
 
 
 def matvec_2d(codes, exps, x, spec: F.FrszSpec, *, bm: int = 8, bn: int = 2048,
@@ -67,6 +84,7 @@ def matvec_2d(codes, exps, x, spec: F.FrszSpec, *, bm: int = 8, bn: int = 2048,
         ],
         out_specs=pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, 1), spec.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, 1), spec.dtype)],
         interpret=interpret,
     )(codes, exps, x)
 
@@ -76,17 +94,10 @@ def matvec_2d(codes, exps, x, spec: F.FrszSpec, *, bm: int = 8, bn: int = 2048,
 # ---------------------------------------------------------------------------
 
 
-def _rmatvec_kernel(c_ref, e_ref, h_ref, o_ref, *, spec: F.FrszSpec):
-    k = pl.program_id(1)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
+def _rmatvec_kernel(c_ref, e_ref, h_ref, o_ref, comp_ref, *, spec: F.FrszSpec):
     vals = _decode_tile(c_ref[...], e_ref[...], spec)
-    o_ref[...] += jnp.dot(
-        h_ref[...], vals, preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+    part = jnp.dot(h_ref[...], vals, preferred_element_type=jnp.float32)
+    _kahan_accumulate(o_ref, comp_ref, part, pl.program_id(1))
 
 
 def rmatvec_2d(codes, exps, h, spec: F.FrszSpec, *, bm: int = 8, bn: int = 2048,
@@ -110,5 +121,6 @@ def rmatvec_2d(codes, exps, h, spec: F.FrszSpec, *, bm: int = 8, bn: int = 2048,
         ],
         out_specs=pl.BlockSpec((1, bn), lambda j, k: (0, j)),
         out_shape=jax.ShapeDtypeStruct((1, n), spec.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bn), spec.dtype)],
         interpret=interpret,
     )(codes, exps, h)

@@ -112,10 +112,36 @@ def _basis_2d(bc: F.BlockCompressed):
     return bc.codes.reshape(m, nb * bs), bc.exps, nb * bs
 
 
+# A whole reduction axis up to this size runs as ONE kernel tile: the dot is
+# then a single MXU contraction, bit-identical to the pure-jnp oracle (the
+# multi-tile path is Kahan-compensated but still order-sensitive).  8192 f32
+# values x 8 rows is ~256 KB of VMEM — comfortably under budget.
+MAX_SINGLE_TILE = 8192
+
+
+def _tile_n(n_pad: int, bn: int, bs: int) -> int:
+    if n_pad <= MAX_SINGLE_TILE:
+        return n_pad
+    bn_eff = min(bn, n_pad)
+    while n_pad % bn_eff:
+        bn_eff //= 2
+    return max(bn_eff, bs)
+
+
 def matvec(bc: F.BlockCompressed, x: jax.Array, *, bn: int = 2048,
            interpret: bool | None = None) -> jax.Array:
-    """y = decompress(V) @ x  for V (m, n) compressed row-wise."""
+    """y = decompress(V) @ x  for V (m, n) compressed row-wise.
+
+    Accepts leading batch dims on the basis (codes ``(..., m, nb, bs)`` with
+    ``x (..., n)``): batched calls vmap onto the 2-D kernel.
+    """
     spec = bc.spec
+    if bc.codes.ndim > 3:
+        return jax.vmap(
+            lambda c, e, xx: matvec(
+                F.BlockCompressed(codes=c, exps=e, n=bc.n, spec=spec), xx,
+                bn=bn, interpret=interpret)
+        )(bc.codes, bc.exps, x)
     if not kernel_supported(spec):
         V = F.decompress(bc)
         return V @ x.astype(V.dtype)
@@ -123,10 +149,7 @@ def matvec(bc: F.BlockCompressed, x: jax.Array, *, bn: int = 2048,
         interpret = _default_interpret()
     codes, exps, n_pad = _basis_2d(bc)
     xp = jnp.pad(x.astype(spec.dtype), (0, n_pad - bc.n)) if n_pad != bc.n else x.astype(spec.dtype)
-    bn_eff = min(bn, n_pad)
-    while n_pad % bn_eff:
-        bn_eff //= 2
-    bn_eff = max(bn_eff, spec.bs)
+    bn_eff = _tile_n(n_pad, bn, spec.bs)
     if n_pad % bn_eff or bn_eff % LANES:
         V = F.decompress(bc)
         return V @ x.astype(V.dtype)
@@ -139,25 +162,36 @@ def matvec(bc: F.BlockCompressed, x: jax.Array, *, bn: int = 2048,
 
 def rmatvec(bc: F.BlockCompressed, h: jax.Array, *, bn: int = 2048,
             interpret: bool | None = None) -> jax.Array:
-    """y = h @ decompress(V)  for V (m, n) compressed row-wise."""
+    """y = h @ decompress(V)  for V (m, n) compressed row-wise.
+
+    Accepts leading batch dims on the basis (see :func:`matvec`).
+    """
     spec = bc.spec
+    if bc.codes.ndim > 3:
+        return jax.vmap(
+            lambda c, e, hh: rmatvec(
+                F.BlockCompressed(codes=c, exps=e, n=bc.n, spec=spec), hh,
+                bn=bn, interpret=interpret)
+        )(bc.codes, bc.exps, h)
     if not kernel_supported(spec):
         V = F.decompress(bc)
         return h.astype(V.dtype) @ V
     if interpret is None:
         interpret = _default_interpret()
     codes, exps, n_pad = _basis_2d(bc)
-    bn_eff = min(2048, n_pad)
-    while n_pad % bn_eff:
-        bn_eff //= 2
-    bn_eff = max(bn_eff, spec.bs)
+    bn_eff = _tile_n(n_pad, bn, spec.bs)
     if n_pad % bn_eff or bn_eff % LANES:
         V = F.decompress(bc)
         return h.astype(V.dtype) @ V
     codes, m = _pad_rows(codes, 8)
     exps, _ = _pad_rows(exps, 8)
-    hp = jnp.pad(h.astype(spec.dtype), (0, codes.shape[0] - m))
-    y = KD.rmatvec_2d(codes, exps, hp[None, :], spec, bm=8, bn=bn_eff,
+    # single-tile m reduction when the whole decoded tile fits VMEM: the
+    # contraction is then one MXU dot (no cross-tile accumulation at all)
+    m_pad = codes.shape[0]
+    one_tile = m_pad <= 512 and m_pad * bn_eff * 4 <= 4 * 1024 * 1024
+    bm_eff = m_pad if one_tile else 8
+    hp = jnp.pad(h.astype(spec.dtype), (0, m_pad - m))
+    y = KD.rmatvec_2d(codes, exps, hp[None, :], spec, bm=bm_eff, bn=bn_eff,
                       interpret=interpret)
     return y[0, : bc.n]
 

@@ -2,6 +2,15 @@
 
   python -m repro.launch.solve --problem synth:atmosmod --n 8000 \
       --formats float64,float32,frsz2_32,float16
+
+``--driver device`` (default) runs each solve as one device-resident XLA
+program (``lax.while_loop`` restart loop, zero host syncs); ``--driver
+host`` is the seed python-looped driver for overhead comparison.
+
+``--batch k`` solves ``k`` right-hand sides per format through
+``gmres_batched`` (vmap over the device-resident driver) and reports
+per-format wall time both total and per solve — the scenario layer for
+serving many simultaneous systems.
 """
 from __future__ import annotations
 
@@ -13,11 +22,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.solver import gmres
+from repro.solver.gmres import gmres_batched
 from repro.sparse import make_problem, rhs_for
+
+
+def _batch_rhs(A, b, k: int):
+    """k deterministic right-hand sides: the reference b plus k-1 variants."""
+    n = A.shape[0]
+    cols = [b]
+    for i in range(1, k):
+        t = jnp.arange(n, dtype=b.dtype)
+        cols.append(b * (1.0 + 0.1 * i) + 0.05 * i * jnp.sin(t * (i + 1)))
+    return jnp.stack(cols)
 
 
 def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                 max_iters: int = 20000, target_rrn: float | None = None,
+                driver: str = "device", batch: int = 1,
                 verbose: bool = True):
     jax.config.update("jax_enable_x64", True)
     A, rrn = make_problem(problem, n)
@@ -27,19 +48,35 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
     rows = []
     for fmt in formats:
         t0 = time.time()
-        res = gmres(A, b, storage=fmt, m=m, max_iters=max_iters,
-                    target_rrn=rrn)
+        if batch > 1:
+            B = _batch_rhs(A, b, batch)
+            results = gmres_batched(A, B, storage=fmt, m=m,
+                                    max_iters=max_iters, target_rrn=rrn)
+            res = results[0]               # reference rhs: accuracy metrics
+            iters = sum(r.iterations for r in results)
+            conv = all(r.converged for r in results)
+        else:
+            res = gmres(A, b, storage=fmt, m=m, max_iters=max_iters,
+                        target_rrn=rrn, driver=driver)
+            iters = res.iterations
+            conv = bool(res.converged)
+        wall = time.time() - t0
         err = float(jnp.linalg.norm(res.x - x_sol)
                     / jnp.linalg.norm(x_sol))
         rows.append(dict(problem=problem, n=A.shape[0], format=fmt,
-                         iters=res.iterations, rrn=res.rrn,
-                         converged=bool(res.converged), x_err=err,
-                         restarts=res.restarts, wall_s=time.time() - t0))
+                         driver=driver if batch == 1 else "device",
+                         batch=batch,
+                         iters=iters, rrn=res.rrn,
+                         converged=conv, x_err=err,
+                         restarts=res.restarts, wall_s=wall,
+                         wall_per_solve_s=wall / max(batch, 1)))
         if verbose:
             r = rows[-1]
+            extra = (f" batch={batch} t/solve={r['wall_per_solve_s']:.2f}s"
+                     if batch > 1 else "")
             print(f"{problem:18s} {fmt:10s} iters={r['iters']:6d} "
                   f"rrn={r['rrn']:.3e} conv={r['converged']} "
-                  f"t={r['wall_s']:.1f}s")
+                  f"t={r['wall_s']:.1f}s{extra}")
     return rows
 
 
@@ -51,10 +88,14 @@ def main(argv=None):
                     default="float64,float32,frsz2_32,float16")
     ap.add_argument("--m", type=int, default=100)
     ap.add_argument("--target-rrn", type=float, default=None)
+    ap.add_argument("--driver", choices=["device", "host"], default="device")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="solve this many RHS per format (vmap batch)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
     rows = solve_suite(args.problem, args.n, args.formats.split(","),
-                       m=args.m, target_rrn=args.target_rrn)
+                       m=args.m, target_rrn=args.target_rrn,
+                       driver=args.driver, batch=args.batch)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)

@@ -1,0 +1,61 @@
+"""Hypothesis shim: real hypothesis when installed, deterministic fallback.
+
+The property tests only need ``@given`` over integer strategies.  On a bare
+environment (no ``hypothesis`` wheel) we run each property against a fixed
+pseudorandom sample sweep instead — deterministic (seeded), honoring
+``max_examples`` from ``@settings`` — so the suite collects and the
+properties still get meaningful coverage.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly per environment
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic plain-pytest fallback
+    import functools
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng) -> int:
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+    def settings(max_examples: int = 20, **_kw):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+
+        return deco
+
+    def given(*strategies):
+        def deco(f):
+            import inspect
+
+            n = getattr(f, "_max_examples", 20)
+
+            @functools.wraps(f)
+            def wrapper(*args, **kw):
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    f(*args, *(s.example(rng) for s in strategies), **kw)
+
+            # hide the strategy-bound (trailing) params from pytest's
+            # fixture resolution
+            sig = inspect.signature(f)
+            kept = list(sig.parameters.values())
+            kept = kept[: len(kept) - len(strategies)]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            return wrapper
+
+        return deco

@@ -1,0 +1,185 @@
+"""Device-resident GMRES driver: parity with the host driver, batching,
+and the storage-format protocol (mixed format, registry extension)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accessor import (
+    BasisAccessor,
+    FORMATS,
+    MixedFormat,
+    NativeFormat,
+    StorageFormat,
+    format_by_name,
+    register_format,
+)
+from repro.solver import gmres
+from repro.solver.gmres import gmres_batched
+from repro.sparse import make_problem, rhs_for
+
+
+def _problem(n=512):
+    A, rrn = make_problem("synth:atmosmod", n)
+    b, x_sol = rhs_for(A)
+    return A, b, x_sol, rrn
+
+
+# ---------------------------------------------------------------------------
+# driver parity: the device-resident while_loop must replicate the host
+# loop's restart decisions exactly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["float64", "float32", "frsz2_32"])
+def test_device_driver_parity(fmt):
+    A, b, _, rrn = _problem()
+    kw = dict(storage=fmt, m=40, max_iters=4000, target_rrn=rrn)
+    rh = gmres(A, b, driver="host", **kw)
+    rd = gmres(A, b, driver="device", **kw)
+    assert rh.iterations == rd.iterations, fmt
+    assert rh.restarts == rd.restarts, fmt
+    assert rh.converged == rd.converged, fmt
+    np.testing.assert_allclose(rh.rrn, rd.rrn, rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(rh.x), np.asarray(rd.x),
+                               rtol=1e-10, atol=1e-12)
+    # restart schedule identical; per-iteration history equal to fusion noise
+    np.testing.assert_allclose(rh.restart_rrns, rd.restart_rrns, rtol=1e-12)
+    assert rh.rrn_history.shape == rd.rrn_history.shape
+    np.testing.assert_allclose(rh.rrn_history, rd.rrn_history,
+                               rtol=1e-10, atol=1e-15)
+
+
+def test_device_driver_stagnation_parity():
+    """widerange stalls frsz2 (paper Fig. 9b): both drivers must cut off
+    at the same iteration via the stagnation guard, not run to max_iters."""
+    A, _ = make_problem("synth:widerange", 256)
+    b, _ = rhs_for(A)
+    kw = dict(storage="frsz2_32", m=20, max_iters=400, target_rrn=1e-12)
+    rh = gmres(A, b, driver="host", **kw)
+    rd = gmres(A, b, driver="device", **kw)
+    assert rh.iterations == rd.iterations
+    assert rh.converged == rd.converged
+    assert rh.restarts == rd.restarts
+
+
+def test_device_driver_trivial_rhs_converges_immediately():
+    A, b, _, _ = _problem(216)
+    x0 = jnp.asarray(np.linalg.solve(np.asarray(A.to_dense()),
+                                     np.asarray(b)))
+    res = gmres(A, b, x0=x0, m=20, max_iters=100, target_rrn=1e-10)
+    assert res.converged
+    assert res.iterations == 0
+    assert res.restarts == 1
+
+
+# ---------------------------------------------------------------------------
+# batched driver
+# ---------------------------------------------------------------------------
+
+
+def test_gmres_batched_matches_single():
+    A, b, _, rrn = _problem()
+    n = b.shape[0]
+    B = jnp.stack([b, 2.0 * b, b + 0.1 * jnp.sin(jnp.arange(n))])
+    kw = dict(storage="frsz2_32", m=40, max_iters=4000, target_rrn=rrn)
+    batched = gmres_batched(A, B, **kw)
+    assert len(batched) == 3
+    for i, rb in enumerate(batched):
+        rs = gmres(A, B[i], driver="device", **kw)
+        assert rb.iterations == rs.iterations, i
+        assert rb.converged and rs.converged
+        np.testing.assert_allclose(np.asarray(rb.x), np.asarray(rs.x),
+                                   rtol=1e-10, atol=1e-14)
+        # vmapped matvec fuses differently: schedule identical, values to
+        # within a few ULP of the (tiny) restart residuals
+        np.testing.assert_allclose(rb.restart_rrns, rs.restart_rrns,
+                                   rtol=1e-6)
+
+
+def test_gmres_batched_independent_schedules():
+    """Systems of different difficulty stop at different iteration counts."""
+    A, b, _, rrn = _problem(256)
+    n = b.shape[0]
+    B = jnp.stack([b, jnp.ones((n,), b.dtype)])
+    out = gmres_batched(A, B, storage="float64", m=20, max_iters=2000,
+                        target_rrn=rrn)
+    assert all(r.converged for r in out)
+    assert len({r.iterations for r in out} | {0}) >= 2  # not lock-stepped
+
+
+# ---------------------------------------------------------------------------
+# storage-format protocol
+# ---------------------------------------------------------------------------
+
+
+def test_accessor_has_no_concrete_format_dispatch():
+    import inspect
+
+    src = inspect.getsource(BasisAccessor)
+    assert "isinstance" not in src
+
+
+def test_mixed_format_head_is_exact():
+    rng = np.random.default_rng(3)
+    m, n = 6, 256
+    fmt = format_by_name("mixed:2:frsz2_16", arith_dtype=jnp.float64, bs=32)
+    assert isinstance(fmt, MixedFormat) and fmt.k == 2
+    acc = BasisAccessor(fmt=fmt, m=m, n=n, arith_dtype=jnp.float64)
+    store = acc.empty()
+    V = rng.standard_normal((m, n))
+    for j in range(m):
+        store = acc.write_row(store, j, jnp.asarray(V[j]))
+    Vr = np.asarray(acc.read_all(store))
+    # head rows roundtrip exactly (f64), tail rows carry frsz2_16 error
+    np.testing.assert_array_equal(Vr[:2], V[:2])
+    tail_err = np.abs(Vr[2:] - V[2:]).max()
+    assert 0 < tail_err < 1e-3
+    # nbytes: between all-compressed and all-f64
+    full = NativeFormat(jnp.float64).nbytes(m, n)
+    tail_only = fmt.tail.nbytes(m, n)
+    assert tail_only < acc.nbytes() < full
+
+
+def test_mixed_format_converges_between_f64_and_tail():
+    A, b, _, rrn = _problem(512)
+    kw = dict(m=40, max_iters=4000, target_rrn=rrn)
+    it64 = gmres(A, b, storage="float64", **kw).iterations
+    res_mixed = gmres(A, b, storage="mixed:4:frsz2_16", **kw)
+    res_tail = gmres(A, b, storage="frsz2_16",
+                     arith_dtype=jnp.float64, **kw)
+    assert res_mixed.converged
+    assert it64 <= res_mixed.iterations <= res_tail.iterations + 2
+
+
+def test_register_format_extension_point():
+    """Adding a format = implement the protocol + register; no solver edit."""
+
+    class NegatedF32(NativeFormat):
+        """Stores -V (exercises that all reads go through the protocol)."""
+
+        @property
+        def name(self):
+            return "neg32"
+
+        def write_row(self, store, j, v):
+            return store.at[j].set((-v).astype(self.dtype))
+
+        def read_row(self, store, j, arith_dtype, n):
+            return (-store[j]).astype(arith_dtype)
+
+        def read_all(self, store, arith_dtype, n):
+            return (-store).astype(arith_dtype)
+
+    register_format("neg32")(lambda name, **ctx: NegatedF32(jnp.float32))
+    try:
+        fmt = format_by_name("neg32")
+        assert isinstance(fmt, StorageFormat)
+        A, b, _, rrn = _problem(256)
+        res = gmres(A, b, storage="neg32", m=40, max_iters=4000,
+                    target_rrn=rrn)
+        assert res.converged
+    finally:
+        FORMATS.pop("neg32", None)
