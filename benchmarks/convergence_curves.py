@@ -8,7 +8,6 @@ residual estimate per iteration.
 """
 from __future__ import annotations
 
-import json
 
 import numpy as np
 

@@ -1,0 +1,77 @@
+"""ROADMAP `mixed:k:tail` sweep: the CB-GMRES accuracy-hedge curve.
+
+Keeps the first ``k`` Krylov vectors of every cycle in full precision and
+compresses the tail; sweeping ``k`` from 0 (fully compressed) to m (fully
+f64) traces iteration count against basis bytes — the classic hedge: a
+handful of exact leading vectors recovers nearly-f64 convergence at
+nearly-compressed bandwidth.
+
+  PYTHONPATH=src python -m benchmarks.mixed_sweep [--n 2000] [--tail frsz2_16]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.solver import gmres
+from repro.sparse import make_problem, rhs_for
+
+DEFAULT_KS = (0, 1, 2, 4, 8, 16, 32)
+
+
+def run(problem="synth:atmosmod", n=2000, tail="frsz2_16", ks=DEFAULT_KS,
+        m=32, max_iters=6000, verbose=True):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    A, target = make_problem(problem, n)
+    b, _ = rhs_for(A)
+    kw = dict(m=m, max_iters=max_iters, target_rrn=target)
+
+    ref64 = gmres(A, b, storage="float64", **kw)
+    rows = []
+    for k in ks:
+        if k > m:
+            continue
+        fmt = tail if k == 0 else ("float64" if k >= m
+                                   else f"mixed:{k}:{tail}")
+        res = gmres(A, b, storage=fmt, **kw)
+        rows.append(dict(
+            problem=problem, k=k, format=fmt, tail=tail,
+            iters=res.iterations, converged=bool(res.converged),
+            rrn=res.rrn, bytes_read=res.bytes_read,
+            rel_iters=(res.iterations / ref64.iterations
+                       if ref64.iterations else float("nan")),
+        ))
+
+    if verbose:
+        print(f"mixed:k:{tail} sweep on {problem} n={n} m={m} "
+              f"(float64 baseline: {ref64.iterations} iters)")
+        print(f"{'k':>4s} {'format':16s} {'iters':>6s} {'rel':>6s} "
+              f"{'rrn':>10s} {'GB read':>8s}  iteration overhead vs f64")
+        worst = max((r["iters"] - ref64.iterations for r in rows), default=1)
+        for r in rows:
+            over = r["iters"] - ref64.iterations
+            bar = "#" * int(round(40 * over / worst)) if worst > 0 else ""
+            mark = "" if r["converged"] else "  ** no convergence **"
+            print(f"{r['k']:4d} {r['format']:16s} {r['iters']:6d} "
+                  f"{r['rel_iters']:6.2f} {r['rrn']:10.2e} "
+                  f"{r['bytes_read'] / 1e9:8.3f}  {bar}{mark}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--problem", default="synth:atmosmod")
+    ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--tail", default="frsz2_16")
+    ap.add_argument("--m", type=int, default=32)
+    ap.add_argument("--ks", default=",".join(str(k) for k in DEFAULT_KS))
+    args = ap.parse_args(argv)
+    run(problem=args.problem, n=args.n, tail=args.tail, m=args.m,
+        ks=tuple(int(k) for k in args.ks.split(",")))
+
+
+if __name__ == "__main__":
+    main()

@@ -82,7 +82,6 @@ def roofline_table():
     # analytic-floor baseline for every runnable cell (probe-pending cells
     # carry the floor + model flops; the dry-run JSONL has their rolled
     # HLO numbers, under-counted per DESIGN §9's while-loop caveat)
-    import dataclasses
     from repro.configs import ARCHS
     from repro.models.config import SHAPES
     from repro.roofline.analytic import bytes_model

@@ -9,6 +9,7 @@
 | Fig. 7/8 RRN + iteration table| benchmarks.iteration_table    |
 | Fig. 11 end-to-end speedup    | benchmarks.speedup_model      |
 | Eq. 3   storage accounting    | benchmarks.storage_table      |
+| CB-GMRES accuracy hedge       | benchmarks.mixed_sweep        |
 | LM cells roofline (§Roofline) | benchmarks.lm_roofline        |
 """
 from __future__ import annotations
@@ -30,6 +31,7 @@ def main(argv=None):
         convergence_curves,
         iteration_table,
         lm_roofline,
+        mixed_sweep,
         speedup_model,
         storage_table,
     )
@@ -45,6 +47,9 @@ def main(argv=None):
             n=n, max_iters=2000 if args.quick else 6000),
         "speedup_model": lambda: speedup_model.run(
             n=n, max_iters=2000 if args.quick else 6000),
+        "mixed_sweep": lambda: mixed_sweep.run(
+            n=n, max_iters=2000 if args.quick else 6000,
+            ks=(0, 1, 2, 4, 8) if args.quick else mixed_sweep.DEFAULT_KS),
         "lm_roofline": lambda: lm_roofline.run(),
     }
     failed = []

@@ -18,7 +18,6 @@ import time
 
 import numpy as np
 
-from repro.core.accessor import format_by_name
 from repro.solver import gmres
 from repro.sparse import PROBLEMS, make_problem, rhs_for
 

@@ -8,7 +8,7 @@ positions are valid, which keeps masking out of the stub path (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from repro.models.config import ArchConfig, SHAPES, ShapeConfig
+from repro.models.config import ArchConfig, SHAPES
 
 __all__ = ["ARCHS", "get_arch", "SHAPES", "arch_names"]
 

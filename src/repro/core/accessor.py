@@ -54,6 +54,7 @@ __all__ = [
     "NativeFormat",
     "FrszFormat",
     "MixedFormat",
+    "ShardedFormat",
     "BasisAccessor",
     "register_format",
     "format_by_name",
@@ -330,6 +331,71 @@ class MixedFormat(StorageFormat):
         return self.head.nbytes(kh, n) + self.tail.nbytes(kt, n)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedFormat(StorageFormat):
+    """Basis rows split across devices along the vector (n) dimension.
+
+    Each device holds the local chunk of every Krylov vector in ``inner``
+    storage; the accessor's ``n`` is the *local* chunk length.  The format
+    must run inside ``jax.shard_map``/``pmap`` with ``axis_name`` bound
+    (``repro.dist.sharding.basis_partition_specs`` gives the matching
+    in/out specs):
+
+      * ``dots`` — each device computes the partial dot products against
+        its chunk, then reduces over ``axis_name``.  With
+        ``compressed_transport`` (default) the partial sums travel as
+        FRSZ2 codes through
+        :func:`repro.dist.collectives.compressed_psum` — the paper's codec
+        on the wire, exactly like the gradient all-reduce;
+      * ``combine`` — purely local: the result is the local chunk of
+        ``h @ V`` and stays sharded (no collective at all);
+      * ``write_row``/``read_row`` — local compress/decompress of chunks.
+
+    ``nbytes`` reports per-device (local) storage, matching the
+    bandwidth-per-device roofline argument.
+    """
+
+    inner: StorageFormat = NativeFormat(jnp.float32)
+    axis_name: str = "basis"
+    compressed_transport: bool = True
+
+    @property
+    def name(self) -> str:
+        return f"sharded:{self.inner.name}"
+
+    def bits_per_value(self) -> float:
+        return self.inner.bits_per_value()
+
+    def empty(self, m: int, n: int):
+        return self.inner.empty(m, n)
+
+    def rows(self, store) -> int:
+        return self.inner.rows(store)
+
+    def write_row(self, store, j, v):
+        return self.inner.write_row(store, j, v)
+
+    def read_row(self, store, j, arith_dtype, n: int):
+        return self.inner.read_row(store, j, arith_dtype, n)
+
+    def read_all(self, store, arith_dtype, n: int):
+        return self.inner.read_all(store, arith_dtype, n)
+
+    def dots(self, store, w, arith_dtype, n: int):
+        local = self.inner.dots(store, w, arith_dtype, n)
+        if self.compressed_transport:
+            from repro.dist.collectives import compressed_psum
+
+            return compressed_psum(local, self.axis_name).astype(arith_dtype)
+        return jax.lax.psum(local, self.axis_name)
+
+    def combine(self, store, h, arith_dtype, n: int):
+        return self.inner.combine(store, h, arith_dtype, n)
+
+    def nbytes(self, m: int, n: int) -> int:
+        return self.inner.nbytes(m, n)
+
+
 # ---------------------------------------------------------------------------
 # Basis accessor: the Krylov-buffer contract
 # ---------------------------------------------------------------------------
@@ -431,6 +497,19 @@ def _build_mixed(name, *, arith_dtype=jnp.float64, **ctx):
     tail_name = parts[2] if len(parts) > 2 else "frsz2_32"
     tail = format_by_name(tail_name, arith_dtype=arith_dtype, **ctx)
     return MixedFormat(k=k, head=NativeFormat(arith_dtype), tail=tail)
+
+
+@register_format("sharded")
+def _build_sharded(name, *, axis_name="basis", compressed_transport=True,
+                   **ctx):
+    # "sharded:<inner-format-name>"
+    inner_name = name.partition(":")[2]
+    if not inner_name:
+        raise ValueError("sharded format needs an inner format: "
+                         "'sharded:<fmt>'")
+    inner = format_by_name(inner_name, **ctx)
+    return ShardedFormat(inner=inner, axis_name=axis_name,
+                         compressed_transport=compressed_transport)
 
 
 @register_format("emul")

@@ -30,8 +30,6 @@ paper's LibPressio methodology).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -25,7 +25,6 @@ Storage (paper Eq. 3, word size w=4 bytes)::
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

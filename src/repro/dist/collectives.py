@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core import frsz2 as F
 
-__all__ = ["WIRE_SPEC", "compressed_pmean", "pmean_bytes"]
+__all__ = ["WIRE_SPEC", "compressed_pmean", "compressed_psum", "pmean_bytes"]
 
 #: wire codec: frsz2_16 over 128-value blocks (2 B codes + 4 B/128 exps)
 WIRE_SPEC = F.FrszSpec(bs=128, l=16, dtype=jnp.float32)
@@ -54,21 +54,42 @@ def _compress_leaf(x):
     return F.compress(x.reshape(-1).astype(jnp.float32), WIRE_SPEC)
 
 
+def _gathered_shards(x, axis_name: str):
+    """All-gather one leaf's FRSZ2 codes over ``axis_name``; returns the
+    decompressed ``(P, n_flat)`` per-device shards."""
+    bc = _compress_leaf(x)
+    codes = jax.lax.all_gather(bc.codes, axis_name)       # (P, nb, bs) u16
+    exps = jax.lax.all_gather(bc.exps, axis_name)         # (P, nb)
+    gathered = F.BlockCompressed(
+        codes=codes, exps=exps, n=bc.n, spec=WIRE_SPEC
+    )
+    return F.decompress(gathered)                         # (P, n_flat)
+
+
 def compressed_pmean(tree, axis_name: str):
     """Mean of ``tree`` over ``axis_name`` with FRSZ2-compressed transport."""
 
     def leaf_pmean(x):
-        bc = _compress_leaf(x)
-        codes = jax.lax.all_gather(bc.codes, axis_name)   # (P, nb, bs) u16
-        exps = jax.lax.all_gather(bc.exps, axis_name)     # (P, nb)
-        gathered = F.BlockCompressed(
-            codes=codes, exps=exps, n=bc.n, spec=WIRE_SPEC
-        )
-        shards = F.decompress(gathered)                   # (P, n_flat)
-        mean = jnp.mean(shards, axis=0)
+        mean = jnp.mean(_gathered_shards(x, axis_name), axis=0)
         return mean[: x.size].reshape(x.shape).astype(x.dtype)
 
     return jax.tree.map(leaf_pmean, tree)
+
+
+def compressed_psum(tree, axis_name: str):
+    """Sum of ``tree`` over ``axis_name`` with FRSZ2-compressed transport.
+
+    The transport for partial reductions whose *operands* live sharded —
+    e.g. the per-device partial dot products of a sharded Krylov basis
+    (``sharded:<fmt>`` storage): each device ships its contribution as
+    frsz2_16 codes and sums the decompressed gather.
+    """
+
+    def leaf_psum(x):
+        total = jnp.sum(_gathered_shards(x, axis_name), axis=0)
+        return total[: x.size].reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(leaf_psum, tree)
 
 
 def pmean_bytes(tree, *, compressed: bool) -> int:

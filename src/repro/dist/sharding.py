@@ -31,6 +31,8 @@ __all__ = [
     "batch_axes",
     "param_shardings",
     "cache_shardings",
+    "basis_partition_specs",
+    "basis_shardings",
 ]
 
 
@@ -166,6 +168,36 @@ def param_shardings(cfg, params, mesh):
     ax_leaves = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
     return jax.tree_util.tree_unflatten(
         treedef, [_named(mesh, rules, ax) for ax in ax_leaves]
+    )
+
+
+def basis_partition_specs(store, axis: str = "basis"):
+    """PartitionSpec tree for a Krylov basis *store*: split along the
+    vector (n) dimension, rows replicated.
+
+    Every storage format keeps the row axis first and the (possibly
+    blocked) vector axis second — native ``(m, n)``, FRSZ2 codes
+    ``(m, nb, bs)``, FRSZ2 exps ``(m, nb)`` — so sharding dim 1 of every
+    ``ndim >= 2`` leaf splits each basis vector across devices while
+    keeping compressed blocks intact (``n`` must split on block
+    boundaries, i.e. ``n_local`` a multiple of the block size).  Used with
+    ``jax.shard_map`` in/out specs around a ``sharded:<fmt>`` accessor.
+    """
+
+    def visit(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            spec[1] = axis
+        return P(*spec)
+
+    return jax.tree.map(visit, store)
+
+
+def basis_shardings(store, mesh, axis: str = "basis"):
+    """NamedSharding tree for a basis store (see
+    :func:`basis_partition_specs`)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), basis_partition_specs(store, axis)
     )
 
 

@@ -1,9 +1,18 @@
 """Public, jit-friendly wrappers around the Pallas FRSZ2 kernels.
 
 Handles layout/padding so callers can use logical shapes; dispatches to the
-pure-jnp reference on CPU-hostile cases.  ``interpret`` defaults to True on
-CPU backends (the container validates kernels in interpret mode; on real TPU
-hardware set ``repro.kernels.ops.INTERPRET = False`` or pass explicitly).
+pure-jnp reference on CPU-hostile cases.
+
+Interpret mode is **auto-detected**: kernels run compiled on accelerator
+backends (TPU/GPU) and in Pallas interpret mode when only CPU is present.
+Two overrides, checked in order:
+
+  * ``repro.kernels.ops.INTERPRET = True/False`` — programmatic pin
+    (``None``, the default, means auto);
+  * ``REPRO_INTERPRET=1|0|auto`` environment variable;
+
+and every wrapper still accepts an explicit ``interpret=`` argument that
+beats both.
 
 Kernel-path constraints (TPU alignment, see frsz2_kernel.py docstring):
   * aligned code widths only: l in {8, 16, 32}
@@ -11,8 +20,7 @@ Kernel-path constraints (TPU alignment, see frsz2_kernel.py docstring):
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence
+import os
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +33,25 @@ from repro.kernels import decode_attn as KA
 
 LANES = 128
 
+#: tri-state interpret pin: ``None`` = auto-detect (env var, then backend);
+#: ``True``/``False`` forces interpret/compiled for all wrapper calls that
+#: don't pass ``interpret=`` explicitly.
+INTERPRET: bool | None = None
+
+_ACCEL_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
 
 def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    if INTERPRET is not None:
+        return INTERPRET
+    env = os.environ.get("REPRO_INTERPRET", "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
+    return jax.default_backend() not in _ACCEL_BACKENDS
 
 
 def kernel_supported(spec: F.FrszSpec) -> bool:

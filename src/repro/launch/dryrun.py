@@ -117,7 +117,6 @@ def run_probes(arch: str, shape_name: str, *, kv_format: str | None = None,
     """
     import dataclasses
 
-    from repro.launch.specs import build_cell as _bc
     from repro.roofline.analysis import collective_bytes
     from repro.roofline.probe import extrapolate, probe_plan
 

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.models import decode_step, init_decode_cache, init_params, prefill
+from repro.models import decode_step, init_params, prefill
 from repro.models.config import ArchConfig
 
 

@@ -11,6 +11,16 @@ host`` is the seed python-looped driver for overhead comparison.
 ``gmres_batched`` (vmap over the device-resident driver) and reports
 per-format wall time both total and per solve — the scenario layer for
 serving many simultaneous systems.
+
+Pipeline flags (see ``repro.solver.pipeline``):
+
+  * ``--precond jacobi`` applies right preconditioning inside the jitted
+    cycle of every solve;
+  * ``--ortho cgs2`` swaps the orthogonalizer (default ``mgs``);
+  * ``--policy adaptive`` (or an explicit ladder such as
+    ``adaptive:float64,frsz2_32@1e-2,frsz2_16@1e-6``) adds one extra run
+    whose storage format is chosen per restart cycle; its row reports the
+    policy name as the format.
 """
 from __future__ import annotations
 
@@ -39,42 +49,51 @@ def _batch_rhs(A, b, k: int):
 def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                 max_iters: int = 20000, target_rrn: float | None = None,
                 driver: str = "device", batch: int = 1,
-                verbose: bool = True):
+                precond: str | None = None, ortho: str = "mgs",
+                policy: str | None = None, verbose: bool = True):
     jax.config.update("jax_enable_x64", True)
     A, rrn = make_problem(problem, n)
     if target_rrn is not None:
         rrn = target_rrn
     b, x_sol = rhs_for(A)
     rows = []
-    for fmt in formats:
+    runs = [dict(label=fmt, storage=fmt, policy=None) for fmt in formats]
+    if policy:
+        runs.append(dict(label=policy, storage=None, policy=policy))
+    for run in runs:
+        kw = dict(storage=run["storage"], policy=run["policy"],
+                  precond=precond, ortho=ortho, m=m, max_iters=max_iters,
+                  target_rrn=rrn)
         t0 = time.time()
         if batch > 1:
             B = _batch_rhs(A, b, batch)
-            results = gmres_batched(A, B, storage=fmt, m=m,
-                                    max_iters=max_iters, target_rrn=rrn)
+            results = gmres_batched(A, B, **kw)
             res = results[0]               # reference rhs: accuracy metrics
             iters = sum(r.iterations for r in results)
             conv = all(r.converged for r in results)
+            nbytes = sum(r.bytes_read for r in results)
         else:
-            res = gmres(A, b, storage=fmt, m=m, max_iters=max_iters,
-                        target_rrn=rrn, driver=driver)
+            res = gmres(A, b, driver=driver, **kw)
             iters = res.iterations
             conv = bool(res.converged)
+            nbytes = res.bytes_read
         wall = time.time() - t0
         err = float(jnp.linalg.norm(res.x - x_sol)
                     / jnp.linalg.norm(x_sol))
-        rows.append(dict(problem=problem, n=A.shape[0], format=fmt,
+        rows.append(dict(problem=problem, n=A.shape[0], format=run["label"],
                          driver=driver if batch == 1 else "device",
-                         batch=batch,
+                         batch=batch, precond=precond or "identity",
+                         ortho=ortho,
                          iters=iters, rrn=res.rrn,
                          converged=conv, x_err=err,
                          restarts=res.restarts, wall_s=wall,
+                         bytes_read=nbytes,
                          wall_per_solve_s=wall / max(batch, 1)))
         if verbose:
             r = rows[-1]
             extra = (f" batch={batch} t/solve={r['wall_per_solve_s']:.2f}s"
                      if batch > 1 else "")
-            print(f"{problem:18s} {fmt:10s} iters={r['iters']:6d} "
+            print(f"{problem:18s} {r['format']:10s} iters={r['iters']:6d} "
                   f"rrn={r['rrn']:.3e} conv={r['converged']} "
                   f"t={r['wall_s']:.1f}s{extra}")
     return rows
@@ -91,11 +110,21 @@ def main(argv=None):
     ap.add_argument("--driver", choices=["device", "host"], default="device")
     ap.add_argument("--batch", type=int, default=1,
                     help="solve this many RHS per format (vmap batch)")
+    ap.add_argument("--precond", default=None,
+                    help="right preconditioner: jacobi (default: none)")
+    ap.add_argument("--ortho", choices=["mgs", "cgs2"], default="mgs",
+                    help="orthogonalization scheme")
+    ap.add_argument("--policy", default=None,
+                    help="per-cycle precision policy run to append, e.g. "
+                         "'adaptive' or "
+                         "'adaptive:float64,frsz2_32@1e-2,frsz2_16@1e-6'")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
     rows = solve_suite(args.problem, args.n, args.formats.split(","),
                        m=args.m, target_rrn=args.target_rrn,
-                       driver=args.driver, batch=args.batch)
+                       driver=args.driver, batch=args.batch,
+                       precond=args.precond, ortho=args.ortho,
+                       policy=args.policy)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)

@@ -15,7 +15,6 @@ step kinds:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

@@ -32,9 +32,7 @@ import numpy as np
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.configs import get_arch
 from repro.data import GlobalBatchSpec
-from repro.dist import act_sharding
 from repro.dist.collectives import compressed_pmean
-from repro.dist.sharding import mesh_rules
 from repro.models import init_params, loss_fn
 from repro.models.config import ArchConfig
 from repro.optim import AdamWConfig, adamw_init, adamw_update

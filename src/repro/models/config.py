@@ -14,8 +14,6 @@ the paper's whole-block-write constraint holds by construction).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 __all__ = ["ArchConfig", "ShapeConfig", "SHAPES"]
 
 

@@ -23,7 +23,6 @@ compressed per the paper's technique (``cfg.kv_format``).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ is *inapplicable* to the pure-SSM architecture (DESIGN.md
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,7 @@
 
 Faithful to the paper's algorithmic formulation:
 
-  * Arnoldi with modified-Gram-Schmidt expressed as the two Accessor hot
+  * Arnoldi with the orthogonalization expressed as the two Accessor hot
     loops ``h = V_j^T w`` (dots) and ``w -= V_j h`` (combine);
   * conditional re-orthogonalization when ``h_{j+1,j} < eta * ||w_pre||``
     (Fig. 1 steps 6-10, the "twice is enough" criterion);
@@ -16,6 +16,29 @@ Faithful to the paper's algorithmic formulation:
     float32/float16 (CB-GMRES [1]), FRSZ2 (this paper), or mixed-precision.
     All arithmetic is performed in ``arith_dtype`` (f64 on CPU for
     paper-faithful runs, f32 on TPU).
+
+Cycle pipeline
+--------------
+
+The cycle is assembled from three pluggable stages (see
+:mod:`repro.solver.pipeline`):
+
+  * ``ortho`` — :class:`~repro.solver.pipeline.Orthogonalizer`: ``"mgs"``
+    (seed scheme, conditional reorth) or ``"cgs2"`` (two unconditional
+    batched passes through the fused ``StorageFormat.dots`` path);
+  * ``precond`` — :class:`~repro.solver.pipeline.Preconditioner`, applied
+    as *right* preconditioning ``A M^{-1}`` inside the jitted cycle of
+    both drivers: ``"jacobi"``, a callable hook, or any object with
+    ``apply``;
+  * ``policy`` — :class:`~repro.solver.pipeline.PrecisionPolicy`: the
+    storage format per restart cycle.  The device driver pre-builds one
+    store per policy level and dispatches the cycle through ``lax.switch``
+    on the restart residual, so an adaptive ``float64 -> frsz2_32 ->
+    frsz2_16`` schedule still runs as a single XLA program.
+
+Every result carries ``bytes_read`` — the modelled basis read traffic
+(rows touched by read_row/dots/combine/update times the active format's
+per-row storage), the quantity the paper's bandwidth argument is about.
 
 Drivers
 -------
@@ -42,7 +65,7 @@ finished systems are masked).
 
 The inner cycle is a single ``lax.fori_loop`` over a fixed-capacity basis
 buffer with row masking, so the solver traces once per
-(problem-size, m, format) combination.
+(problem-size, m, pipeline) combination.
 """
 from __future__ import annotations
 
@@ -55,7 +78,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.accessor import BasisAccessor, NativeFormat, format_by_name
+from repro.core.accessor import BasisAccessor
+from repro.solver.pipeline import (
+    orthogonalizer_by_name,
+    resolve_policy,
+    resolve_preconditioner,
+)
 
 __all__ = ["GmresResult", "gmres", "gmres_batched", "cb_gmres"]
 
@@ -71,6 +99,7 @@ class GmresResult:
     rrn_history: np.ndarray      # implicit residual estimate per iteration
     restart_rrns: np.ndarray     # explicit RRN measured at each restart
     restarts: int
+    bytes_read: float = 0.0      # modelled basis read traffic (bytes)
 
 
 def _givens(a, b):
@@ -83,13 +112,12 @@ def _givens(a, b):
 
 
 def _cycle(matvec: Callable, acc: BasisAccessor, b_norm, store, w0, beta,
-           eta: float, target: float):
+           eta: float, target: float, ortho, precond):
     """One GMRES(m) cycle.  w0 = r0 (unnormalized); beta = ||r0||.
 
-    Returns (store, R, g, rrn_est, j_stop) where R is the rotated Hessenberg
-    (upper triangular in its leading block), g the rotated rhs, rrn_est the
-    per-inner-iteration implicit residual estimate, and j_stop the number of
-    *useful* iterations (capped by breakdown / convergence).
+    Returns (store, R, g, rrn_est) where R is the rotated Hessenberg
+    (upper triangular in its leading block), g the rotated rhs, and rrn_est
+    the per-inner-iteration implicit residual estimate.
     """
     m = acc.m - 1
     ad = acc.arith_dtype
@@ -106,24 +134,11 @@ def _cycle(matvec: Callable, acc: BasisAccessor, b_norm, store, w0, beta,
     def body(j, carry):
         store, R, g, cs, sn, est, alive = carry
         v = acc.read_row(store, j)
-        w = matvec(v).astype(ad)
+        w = matvec(precond.apply(v)).astype(ad)
         w_pre = jnp.linalg.norm(w)
 
         mask = rows <= j
-        h = acc.dots(store, w, mask)                    # h_{1:j,j} := V_j^T w
-        w = w - acc.combine(store, h, mask)             # w -= V_j h
-        hj1 = jnp.linalg.norm(w)
-
-        # conditional re-orthogonalization (Fig. 1 steps 6-10)
-        def reorth(args):
-            w, h, _ = args
-            u = acc.dots(store, w, mask)
-            w2 = w - acc.combine(store, u, mask)
-            return w2, h + u, jnp.linalg.norm(w2)
-
-        w, h, hj1 = jax.lax.cond(
-            hj1 < eta * w_pre, reorth, lambda a: a, (w, h, hj1)
-        )
+        w, h, hj1 = ortho(acc, store, w, mask, eta)
 
         breakdown = hj1 <= 1e-30 * w_pre + _TINY
         hj1_safe = jnp.maximum(hj1, _TINY)
@@ -166,8 +181,8 @@ def _cycle(matvec: Callable, acc: BasisAccessor, b_norm, store, w0, beta,
     return store, R, g, est
 
 
-def _solve_and_update(acc: BasisAccessor, store, R, g, j_stop, x0):
-    """y = argmin ||beta e1 - H y|| (truncated at j_stop), x = x0 + V_m y."""
+def _solve_and_update(acc: BasisAccessor, store, R, g, j_stop, x0, precond):
+    """y = argmin ||beta e1 - H y|| (truncated at j_stop), x = x0 + M^{-1}V_m y."""
     m = acc.m - 1
     ad = acc.arith_dtype
     idx = jnp.arange(m)
@@ -185,8 +200,17 @@ def _solve_and_update(acc: BasisAccessor, store, R, g, j_stop, x0):
 
     y = jax.lax.fori_loop(0, m, back, jnp.zeros((m,), ad))
     ypad = jnp.concatenate([y, jnp.zeros((1,), ad)])
-    dx = acc.combine(store, ypad, jnp.arange(m + 1) < j_stop)
+    dx = precond.apply(acc.combine(store, ypad, jnp.arange(m + 1) < j_stop))
     return x0 + dx
+
+
+def _cycle_row_reads(j_stop, passes: int):
+    """Basis rows touched by one cycle of ``j_stop`` useful iterations.
+
+    Per iteration j: 1 read_row + ``passes`` sweeps of dots+combine over the
+    j+1 live rows; plus the solution-update combine over j_stop rows.
+    """
+    return j_stop * (2 + passes * (j_stop + 1))
 
 
 # ---------------------------------------------------------------------------
@@ -194,7 +218,7 @@ def _solve_and_update(acc: BasisAccessor, store, R, g, j_stop, x0):
 # ---------------------------------------------------------------------------
 
 
-def _resolve(A, b, storage, m, arith_dtype, matvec):
+def _resolve(A, b, storage, policy, m, arith_dtype, matvec, precond, ortho):
     if arith_dtype is None:
         arith_dtype = b.dtype
     if matvec is None:
@@ -203,13 +227,15 @@ def _resolve(A, b, storage, m, arith_dtype, matvec):
             matvec = partial(A.matvec, row_ids=row_ids)
         else:
             matvec = A.matvec
-    if storage is None:
-        storage = NativeFormat(dtype=arith_dtype)
-    elif isinstance(storage, str):
-        storage = format_by_name(storage, arith_dtype=arith_dtype)
+    policy = resolve_policy(policy, storage, arith_dtype)
     n = b.shape[0]
-    acc = BasisAccessor(fmt=storage, m=m + 1, n=n, arith_dtype=arith_dtype)
-    return acc, arith_dtype, matvec
+    accs = tuple(
+        BasisAccessor(fmt=f, m=m + 1, n=n, arith_dtype=arith_dtype)
+        for f in policy.formats()
+    )
+    precond = resolve_preconditioner(precond, A)
+    ortho = orthogonalizer_by_name(ortho)
+    return accs, policy, arith_dtype, matvec, precond, ortho
 
 
 # ---------------------------------------------------------------------------
@@ -217,30 +243,38 @@ def _resolve(A, b, storage, m, arith_dtype, matvec):
 # ---------------------------------------------------------------------------
 
 
-def _gmres_host(matvec, acc, b, m, max_iters, target_rrn, eta,
-                x0=None) -> GmresResult:
-    arith_dtype = acc.arith_dtype
+def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
+                ortho, precond, x0=None) -> GmresResult:
+    arith_dtype = accs[0].arith_dtype
     b = b.astype(arith_dtype)
     b_norm = jnp.linalg.norm(b)
     x = jnp.zeros_like(b) if x0 is None else x0.astype(arith_dtype)
 
-    cycle = jax.jit(
-        lambda store, w0, beta: _cycle(
-            matvec, acc, b_norm, store, w0, beta, eta, target_rrn
+    def make_cycle(acc):
+        return jax.jit(
+            lambda store, w0, beta: _cycle(
+                matvec, acc, b_norm, store, w0, beta, eta, target_rrn,
+                ortho, precond
+            )
         )
-    )
-    update = jax.jit(
-        lambda store, R, g, j_stop, x0_: _solve_and_update(
-            acc, store, R, g, j_stop, x0_
+
+    def make_update(acc):
+        return jax.jit(
+            lambda store, R, g, j_stop, x0_: _solve_and_update(
+                acc, store, R, g, j_stop, x0_, precond
+            )
         )
-    )
+
+    # per-policy-level jitted kernels + stores, built on first use
+    kernels: dict[int, tuple] = {}
+    stores: dict[int, Any] = {}
 
     history: list[np.ndarray] = []
     restart_rrns: list[float] = []
     total_iters = 0
     converged = False
+    bytes_read = 0.0
     rrn = float(jnp.linalg.norm(b - matvec(x)) / b_norm)
-    store = acc.empty()
 
     while total_iters < max_iters and not converged:
         r = b - matvec(x).astype(arith_dtype)
@@ -250,15 +284,22 @@ def _gmres_host(matvec, acc, b, m, max_iters, target_rrn, eta,
             converged = True
             rrn = restart_rrns[-1]
             break
-        store, R, g, est = cycle(store, r, beta)
+        lvl = int(policy.level(restart_rrns[-1], len(restart_rrns) - 1))
+        if lvl not in kernels:
+            kernels[lvl] = (make_cycle(accs[lvl]), make_update(accs[lvl]))
+            stores[lvl] = accs[lvl].empty()
+        cycle, update = kernels[lvl]
+        stores[lvl], R, g, est = cycle(stores[lvl], r, beta)
         est_np = np.asarray(est)
         # first inner iteration that met the target (1-based count)
         hit = np.nonzero(est_np <= target_rrn)[0]
         j_stop = int(hit[0]) + 1 if hit.size else m
         # breakdown shows up as a frozen tail in est; detect via argmin
-        x = update(store, R, g, jnp.asarray(j_stop), x)
+        x = update(stores[lvl], R, g, jnp.asarray(j_stop), x)
         history.append(est_np[:j_stop])
         total_iters += j_stop
+        bytes_read += _cycle_row_reads(j_stop, ortho.passes) * (
+            accs[lvl].nbytes() / accs[lvl].m)
         rrn = float(jnp.linalg.norm(b - matvec(x).astype(arith_dtype)) / b_norm)
         if rrn <= target_rrn:
             converged = True
@@ -280,6 +321,7 @@ def _gmres_host(matvec, acc, b, m, max_iters, target_rrn, eta,
                      else np.zeros((0,), np.float64)),
         restart_rrns=np.asarray(restart_rrns),
         restarts=len(restart_rrns),
+        bytes_read=bytes_read,
     )
 
 
@@ -288,16 +330,22 @@ def _gmres_host(matvec, acc, b, m, max_iters, target_rrn, eta,
 # ---------------------------------------------------------------------------
 
 
-def _device_solve_fn(matvec, acc: BasisAccessor, m: int, max_iters: int,
-                     eta: float, target_rrn: float):
+def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
+                     eta: float, target_rrn: float, ortho, precond):
     """Build the pure (b, x0) -> state solve function (jit/vmap-able).
 
     Semantics replicate ``_gmres_host`` decision-for-decision so the two
     drivers produce identical iteration counts, restart schedules, and
     residual histories (the parity test asserts this).  The returned state
     dict carries fixed-size history buffers; the host wrapper trims them.
+
+    Multi-level precision policies carry one pre-built store per level and
+    dispatch each cycle with ``lax.switch`` on the policy's level index —
+    the whole adaptive solve remains a single XLA program.
     """
-    ad = acc.arith_dtype
+    ad = accs[0].arith_dtype
+    n_levels = len(accs)
+    row_bytes = [acc.nbytes() / acc.m for acc in accs]
     hist_cap = max_iters + m          # last cycle may overrun max_iters
     rst_cap = max_iters + 1           # one restart record per cycle + final
 
@@ -308,7 +356,7 @@ def _device_solve_fn(matvec, acc: BasisAccessor, m: int, max_iters: int,
 
         init = dict(
             x=x0,
-            store=acc.empty(),
+            stores=tuple(acc.empty() for acc in accs),
             total=jnp.asarray(0, jnp.int32),
             cycles=jnp.asarray(0, jnp.int32),
             restarts=jnp.asarray(0, jnp.int32),
@@ -316,6 +364,7 @@ def _device_solve_fn(matvec, acc: BasisAccessor, m: int, max_iters: int,
             stagnated=jnp.asarray(False),
             rrn=rrn0,
             prev_last=jnp.asarray(jnp.inf, ad),
+            nbytes=jnp.asarray(0.0, ad),
             hist=jnp.zeros((hist_cap,), ad),
             rst=jnp.zeros((rst_cap,), ad),
         )
@@ -330,35 +379,55 @@ def _device_solve_fn(matvec, acc: BasisAccessor, m: int, max_iters: int,
             rst = s["rst"].at[s["restarts"]].set(rr, mode="drop")
             restarts = s["restarts"] + 1
             early = rr <= target_rrn        # restart residual already there
+            lvl = policy.level(rr, s["cycles"])
+
+            def run_cycle_at(k):
+                def run(s):
+                    acc = accs[k]
+                    store, R, g, est = _cycle(
+                        matvec, acc, b_norm, s["stores"][k], r, beta, eta,
+                        target_rrn, ortho, precond
+                    )
+                    hit = est <= target_rrn
+                    hit_any = jnp.any(hit)
+                    j_stop = jnp.where(
+                        hit_any, jnp.argmax(hit).astype(jnp.int32) + 1, m
+                    )
+                    x = _solve_and_update(acc, store, R, g, j_stop, s["x"],
+                                          precond)
+                    idx = s["total"] + jnp.arange(m)
+                    hist = s["hist"].at[idx].set(est, mode="drop")
+                    total = s["total"] + j_stop
+                    cycles = s["cycles"] + 1
+                    rrn = jnp.linalg.norm(b - matvec(x).astype(ad)) / b_norm
+                    conv = rrn <= target_rrn
+                    last = est[jnp.maximum(j_stop - 1, 0)]
+                    # stagnation guard (host: np.allclose(last, prev, 1e-2))
+                    stag = (
+                        ~conv & hit_any & (j_stop >= m) & (cycles > 4)
+                        & (jnp.abs(last - s["prev_last"])
+                           <= 1e-8 + 1e-2 * jnp.abs(s["prev_last"]))
+                    )
+                    nbytes = s["nbytes"] + (
+                        _cycle_row_reads(j_stop, ortho.passes).astype(ad)
+                        * row_bytes[k])
+                    stores = tuple(
+                        store if i == k else s["stores"][i]
+                        for i in range(n_levels)
+                    )
+                    return dict(
+                        x=x, stores=stores, total=total, cycles=cycles,
+                        restarts=restarts, converged=conv, stagnated=stag,
+                        rrn=rrn, prev_last=last, nbytes=nbytes, hist=hist,
+                        rst=rst,
+                    )
+                return run
 
             def run_cycle(s):
-                store, R, g, est = _cycle(
-                    matvec, acc, b_norm, s["store"], r, beta, eta, target_rrn
-                )
-                hit = est <= target_rrn
-                hit_any = jnp.any(hit)
-                j_stop = jnp.where(
-                    hit_any, jnp.argmax(hit).astype(jnp.int32) + 1, m
-                )
-                x = _solve_and_update(acc, store, R, g, j_stop, s["x"])
-                idx = s["total"] + jnp.arange(m)
-                hist = s["hist"].at[idx].set(est, mode="drop")
-                total = s["total"] + j_stop
-                cycles = s["cycles"] + 1
-                rrn = jnp.linalg.norm(b - matvec(x).astype(ad)) / b_norm
-                conv = rrn <= target_rrn
-                last = est[jnp.maximum(j_stop - 1, 0)]
-                # stagnation guard (host: np.allclose(last, prev, rtol=1e-2))
-                stag = (
-                    ~conv & hit_any & (j_stop >= m) & (cycles > 4)
-                    & (jnp.abs(last - s["prev_last"])
-                       <= 1e-8 + 1e-2 * jnp.abs(s["prev_last"]))
-                )
-                return dict(
-                    x=x, store=store, total=total, cycles=cycles,
-                    restarts=restarts, converged=conv, stagnated=stag,
-                    rrn=rrn, prev_last=last, hist=hist, rst=rst,
-                )
+                if n_levels == 1:
+                    return run_cycle_at(0)(s)
+                return jax.lax.switch(
+                    lvl, [run_cycle_at(k) for k in range(n_levels)], s)
 
             def skip_cycle(s):
                 return dict(
@@ -373,7 +442,7 @@ def _device_solve_fn(matvec, acc: BasisAccessor, m: int, max_iters: int,
     return solve
 
 
-def _device_result(state, b_norm_unused=None) -> GmresResult:
+def _device_result(state) -> GmresResult:
     """Trim the device state's fixed buffers into the GmresResult contract."""
     total = int(state["total"])
     restarts = int(state["restarts"])
@@ -385,34 +454,56 @@ def _device_result(state, b_norm_unused=None) -> GmresResult:
         rrn_history=np.asarray(state["hist"][:total]),
         restart_rrns=np.asarray(state["rst"][:restarts]),
         restarts=restarts,
+        bytes_read=float(state["nbytes"]),
     )
 
 
-# Compiled-solve cache: repeated solves of the same (operator, format,
-# geometry) reuse the jitted while_loop program instead of retracing.  The
-# cache pins a strong reference to the key object so its id() stays valid.
+# ---------------------------------------------------------------------------
+# Compiled-solve cache
+# ---------------------------------------------------------------------------
+
+# Repeated solves of the same (operator, pipeline, geometry) reuse the jitted
+# while_loop program instead of retracing.  Operators are keyed by *content*
+# fingerprint (CSR/ELL expose .fingerprint()), so rebuilding the same problem
+# — e.g. repeated solve_suite runs — hits the cache instead of growing it;
+# bare callables fall back to identity keying, with the callable pinned by
+# the entry so its id() stays valid.
 _SOLVE_CACHE: OrderedDict = OrderedDict()
 _SOLVE_CACHE_SIZE = 16
 
 
-def _cached_solve(key_objs, batched, matvec, acc, m, max_iters, eta, target):
-    """key_objs: (A, user_matvec) — both identify the operator; either may
-    be None, and both ids are pinned by the cache entry."""
+def _operator_key(A, user_matvec):
+    """Content-based key for the operator, plus any objects to pin."""
+    if user_matvec is not None:
+        return ("matvec", id(user_matvec)), (user_matvec,)
+    fp = getattr(A, "fingerprint", None)
+    if fp is not None:
+        return ("op", fp()), ()
+    return ("obj", id(A)), (A,)
+
+
+def _cached_solve(A, user_matvec, batched, matvec, accs, policy, m,
+                  max_iters, eta, target, ortho, precond):
+    def build():
+        solve = _device_solve_fn(matvec, accs, policy, m, max_iters, eta,
+                                 target, ortho, precond)
+        return jax.jit(jax.vmap(solve) if batched else solve)
+
     try:
-        key = (tuple(id(o) for o in key_objs), batched, acc.fmt, acc.m,
-               acc.n, jnp.dtype(acc.arith_dtype).name, m, max_iters,
-               float(eta), float(target))
+        op_key, pins = _operator_key(A, user_matvec)
+        pins = pins + (precond,)     # spec() may key on id(fn): keep it alive
+        key = (op_key, batched, policy.spec(), ortho.name, precond.spec(),
+               accs[0].m, accs[0].n, jnp.dtype(accs[0].arith_dtype).name,
+               m, max_iters, float(eta), float(target))
         hash(key)
     except TypeError:
-        solve = _device_solve_fn(matvec, acc, m, max_iters, eta, target)
-        return jax.jit(jax.vmap(solve) if batched else solve)
+        return build()
     ent = _SOLVE_CACHE.get(key)
     if ent is not None:
         _SOLVE_CACHE.move_to_end(key)
         return ent[0]
-    solve = _device_solve_fn(matvec, acc, m, max_iters, eta, target)
-    solve = jax.jit(jax.vmap(solve) if batched else solve)
-    _SOLVE_CACHE[key] = (solve, key_objs)
+    solve = build()
+    _SOLVE_CACHE[key] = (solve, pins)
     while len(_SOLVE_CACHE) > _SOLVE_CACHE_SIZE:
         _SOLVE_CACHE.popitem(last=False)
     return solve
@@ -429,6 +520,9 @@ def gmres(
     *,
     x0: jax.Array | None = None,
     storage: Any = None,
+    policy: Any = None,
+    precond: Any = None,
+    ortho: Any = "mgs",
     m: int = 100,
     max_iters: int = 20000,
     target_rrn: float = 1e-14,
@@ -445,24 +539,37 @@ def gmres(
     ('float64', 'float32', 'frsz2_32', 'mixed:2:frsz2_32', ...).  Default:
     the arithmetic dtype (classic uncompressed GMRES).
 
+    Pipeline arguments (see :mod:`repro.solver.pipeline`):
+
+    ``policy`` selects the storage format *per restart cycle*: a
+    :class:`~repro.solver.pipeline.PrecisionPolicy` or a name
+    (``'adaptive'``, ``'adaptive:float64,frsz2_32@1e-2,frsz2_16@1e-6'``,
+    ``'static:frsz2_32'``).  Overrides ``storage`` when given.
+    ``precond`` is applied as right preconditioning inside the jitted
+    cycle: ``'jacobi'``, a callable ``x -> M^{-1} x``, or a
+    :class:`~repro.solver.pipeline.Preconditioner`.
+    ``ortho`` picks the orthogonalization: ``'mgs'`` (seed scheme) or
+    ``'cgs2'``.
+
     ``driver`` selects the restart loop: ``"device"`` (default) runs the
     whole solve as one jitted ``lax.while_loop``; ``"host"`` is the
     python-looped driver with one device sync per cycle (kept for parity
     testing and driver-overhead measurement).
     """
     user_matvec = matvec
-    acc, arith_dtype, matvec = _resolve(A, b, storage, m, arith_dtype, matvec)
+    accs, policy, arith_dtype, matvec, precond, ortho = _resolve(
+        A, b, storage, policy, m, arith_dtype, matvec, precond, ortho)
     b = b.astype(arith_dtype)
 
     if driver == "host":
-        return _gmres_host(matvec, acc, b, m, max_iters, target_rrn, eta,
-                           x0=x0)
+        return _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn,
+                           eta, ortho, precond, x0=x0)
     if driver != "device":
         raise ValueError(f"unknown driver {driver!r}")
 
     x0 = jnp.zeros_like(b) if x0 is None else x0.astype(arith_dtype)
-    solve = _cached_solve((A, user_matvec), False, matvec, acc,
-                          m, max_iters, eta, target_rrn)
+    solve = _cached_solve(A, user_matvec, False, matvec, accs, policy,
+                          m, max_iters, eta, target_rrn, ortho, precond)
     state = solve(b, x0)
     return _device_result(state)
 
@@ -473,6 +580,9 @@ def gmres_batched(
     *,
     X0: jax.Array | None = None,
     storage: Any = None,
+    policy: Any = None,
+    precond: Any = None,
+    ortho: Any = "mgs",
     m: int = 100,
     max_iters: int = 20000,
     target_rrn: float = 1e-14,
@@ -485,18 +595,19 @@ def gmres_batched(
     vmaps the device-resident driver: one XLA program advances all systems
     together (the while_loop runs until every system has converged or hit
     its iteration budget; finished systems are masked by the batching rule).
+    The full pipeline (``policy``/``precond``/``ortho``) is supported.
     Returns one :class:`GmresResult` per right-hand side.
     """
     if B.ndim != 2:
         raise ValueError(f"B must be (batch, n), got {B.shape}")
     user_matvec = matvec
-    acc, arith_dtype, matvec = _resolve(A, B[0], storage, m, arith_dtype,
-                                        matvec)
+    accs, policy, arith_dtype, matvec, precond, ortho = _resolve(
+        A, B[0], storage, policy, m, arith_dtype, matvec, precond, ortho)
     B = B.astype(arith_dtype)
     X0 = jnp.zeros_like(B) if X0 is None else X0.astype(arith_dtype)
 
-    solve = _cached_solve((A, user_matvec), True, matvec, acc,
-                          m, max_iters, eta, target_rrn)
+    solve = _cached_solve(A, user_matvec, True, matvec, accs, policy,
+                          m, max_iters, eta, target_rrn, ortho, precond)
     states = solve(B, X0)
     k = B.shape[0]
     return [

@@ -1,0 +1,372 @@
+"""Composable GMRES cycle pipeline: the three pluggable stages.
+
+The seed solver hard-wired one orthogonalization scheme, no preconditioning,
+and a storage format frozen for the whole solve.  This module factors those
+three decisions out of ``repro.solver.gmres`` into small protocol objects so
+they compose freely (Loe et al., arXiv:2105.07544 / arXiv:2109.01232: the
+biggest multiprecision-GMRES wins come from *varying* precision and
+preconditioning across the solve):
+
+  * :class:`Orthogonalizer` — how ``w`` is orthogonalized against the basis
+    each Arnoldi step.  ``mgs`` is the seed scheme (one-shot dots/combine
+    plus the conditional "twice is enough" re-orthogonalization, paper
+    Fig. 1 steps 6-10); ``cgs2`` always runs two batched passes through the
+    fused :meth:`StorageFormat.dots` path — twice the basis traffic, but
+    unconditionally orthogonal to machine precision and free of the
+    data-dependent branch.
+  * :class:`Preconditioner` — right preconditioning ``A M^{-1}``: the
+    Arnoldi matvec becomes ``A (M^{-1} v)`` and the solution update becomes
+    ``x += M^{-1} (V y)``, so the explicit restart residual ``b - A x`` is
+    the *true* residual (no preconditioned-norm bookkeeping).  Identity,
+    Jacobi (``M = diag(A)``), and a user-callable hook.  All applications
+    happen inside the jitted cycle of both drivers.
+  * :class:`PrecisionPolicy` — which storage format holds the Krylov basis,
+    chosen *per restart cycle* from the explicit restart residual.
+    :class:`StaticPolicy` freezes one format (the seed behaviour);
+    :class:`AdaptivePolicy` drops precision as the residual falls (inexact
+    Krylov: the further the solve has progressed, the more basis error it
+    tolerates), e.g. ``float64 -> frsz2_32 -> frsz2_16``.  The device
+    driver pre-builds one store per level and dispatches with
+    ``lax.switch`` so the whole solve stays one XLA program.
+
+Every object is stateless-or-frozen and exposes a hashable ``spec()`` used
+by the compiled-solve cache, so pipelines key cleanly alongside the
+operator fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accessor import StorageFormat, format_by_name
+
+__all__ = [
+    "Orthogonalizer",
+    "MGSOrthogonalizer",
+    "CGS2Orthogonalizer",
+    "orthogonalizer_by_name",
+    "Preconditioner",
+    "IdentityPreconditioner",
+    "JacobiPreconditioner",
+    "CallablePreconditioner",
+    "resolve_preconditioner",
+    "PrecisionPolicy",
+    "StaticPolicy",
+    "AdaptivePolicy",
+    "policy_by_name",
+    "resolve_policy",
+]
+
+
+# ---------------------------------------------------------------------------
+# Orthogonalizers
+# ---------------------------------------------------------------------------
+
+
+class Orthogonalizer:
+    """Orthogonalize ``w`` against the masked rows of the basis.
+
+    ``__call__(acc, store, w, mask, eta) -> (w_orth, h, hj1)`` where ``h``
+    is the Hessenberg column against the masked rows and ``hj1 = ||w_orth||``.
+    ``passes`` is the nominal number of full basis sweeps per iteration,
+    used by the drivers' read-traffic accounting.
+    """
+
+    name: str = "base"
+    passes: int = 1
+
+    def __call__(self, acc, store, w, mask, eta):  # pragma: no cover
+        raise NotImplementedError
+
+    def spec(self):
+        return ("ortho", self.name)
+
+
+class MGSOrthogonalizer(Orthogonalizer):
+    """Seed scheme: one-shot dots/combine + conditional re-orthogonalization.
+
+    Re-orthogonalizes iff ``||w_orth|| < eta * ||w||`` (Fig. 1 steps 6-10,
+    the "twice is enough" criterion) — bit-identical to the seed solver.
+    """
+
+    name = "mgs"
+    passes = 1
+
+    def __call__(self, acc, store, w, mask, eta):
+        w_pre = jnp.linalg.norm(w)
+        h = acc.dots(store, w, mask)
+        w = w - acc.combine(store, h, mask)
+        hj1 = jnp.linalg.norm(w)
+
+        def reorth(args):
+            w, h, _ = args
+            u = acc.dots(store, w, mask)
+            w2 = w - acc.combine(store, u, mask)
+            return w2, h + u, jnp.linalg.norm(w2)
+
+        return jax.lax.cond(hj1 < eta * w_pre, reorth, lambda a: a,
+                            (w, h, hj1))
+
+
+class CGS2Orthogonalizer(Orthogonalizer):
+    """Classical Gram-Schmidt, applied twice unconditionally (CGS-2).
+
+    Both passes batch all dot products through the fused
+    :meth:`StorageFormat.dots` path — two dense basis sweeps, no
+    data-dependent branch.  Orthogonality is machine-precision regardless
+    of how ill-conditioned the new direction is.
+    """
+
+    name = "cgs2"
+    passes = 2
+
+    def __call__(self, acc, store, w, mask, eta):
+        h = acc.dots(store, w, mask)
+        w = w - acc.combine(store, h, mask)
+        u = acc.dots(store, w, mask)
+        w = w - acc.combine(store, u, mask)
+        return w, h + u, jnp.linalg.norm(w)
+
+
+_ORTHOGONALIZERS = {"mgs": MGSOrthogonalizer, "cgs2": CGS2Orthogonalizer}
+
+
+def orthogonalizer_by_name(name) -> Orthogonalizer:
+    if isinstance(name, Orthogonalizer):
+        return name
+    try:
+        return _ORTHOGONALIZERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown orthogonalizer {name!r}; "
+            f"have {sorted(_ORTHOGONALIZERS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Preconditioners (right preconditioning: A M^{-1})
+# ---------------------------------------------------------------------------
+
+
+class Preconditioner:
+    """``apply(x) -> M^{-1} x``; applied inside the jitted cycle."""
+
+    def apply(self, x):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def spec(self):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+
+class IdentityPreconditioner(Preconditioner):
+    """No-op: ``apply`` returns its input unchanged (exact seed parity)."""
+
+    def apply(self, x):
+        return x
+
+    def spec(self):
+        return ("identity",)
+
+
+class JacobiPreconditioner(Preconditioner):
+    """Diagonal scaling ``M = diag(A)`` — the classic fix for row-scaled
+    (variable-coefficient) systems, where it collapses the artificial
+    spread ``D A0`` back to the underlying operator's spectrum."""
+
+    def __init__(self, diag: jax.Array):
+        d = jnp.asarray(diag)
+        self.inv_diag = jnp.where(d != 0, 1.0 / jnp.where(d != 0, d, 1.0), 1.0)
+        self._digest = hashlib.sha1(
+            np.asarray(self.inv_diag).tobytes()).hexdigest()
+
+    @classmethod
+    def from_operator(cls, A) -> "JacobiPreconditioner":
+        diag_fn = getattr(A, "diag", None)
+        if diag_fn is None:
+            raise ValueError(
+                "precond='jacobi' needs an operator with .diag() "
+                f"(got {type(A).__name__}); pass a Preconditioner instead")
+        return cls(diag_fn())
+
+    def apply(self, x):
+        return x * self.inv_diag.astype(x.dtype)
+
+    def spec(self):
+        return ("jacobi", self._digest)
+
+
+class CallablePreconditioner(Preconditioner):
+    """User hook: any jit-traceable ``fn(x) -> M^{-1} x``.
+
+    Cache identity is the function object (``name`` overrides for closures
+    rebuilt per call — give equal hooks the same name to share compiles).
+    """
+
+    def __init__(self, fn: Callable, name: str | None = None):
+        self.fn = fn
+        self.name = name
+
+    def apply(self, x):
+        return self.fn(x)
+
+    def spec(self):
+        return ("callable", self.name if self.name is not None else id(self.fn))
+
+
+def resolve_preconditioner(precond, A) -> Preconditioner:
+    """None | 'identity' | 'jacobi' | callable | Preconditioner -> object."""
+    if precond is None or precond == "identity":
+        return IdentityPreconditioner()
+    if isinstance(precond, Preconditioner):
+        return precond
+    if precond == "jacobi":
+        return JacobiPreconditioner.from_operator(A)
+    if callable(precond):
+        return CallablePreconditioner(precond)
+    raise ValueError(f"unknown preconditioner {precond!r}")
+
+
+# ---------------------------------------------------------------------------
+# Precision policies
+# ---------------------------------------------------------------------------
+
+
+class PrecisionPolicy:
+    """Selects the basis storage format per restart cycle.
+
+    ``formats()`` returns the static tuple of candidate formats (one store
+    per format is pre-built by the device driver); ``level(rr, cycle)``
+    maps the explicit restart residual (traced or concrete) to an index
+    into that tuple.
+    """
+
+    def formats(self) -> tuple:  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def level(self, rr, cycle):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def spec(self):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticPolicy(PrecisionPolicy):
+    """One format for the whole solve (the seed behaviour)."""
+
+    fmt: StorageFormat
+
+    def formats(self) -> tuple:
+        return (self.fmt,)
+
+    def level(self, rr, cycle):
+        return jnp.asarray(0, jnp.int32)
+
+    def spec(self):
+        return ("static", self.fmt)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptivePolicy(PrecisionPolicy):
+    """Drop precision as the residual falls (inexact-Krylov schedule).
+
+    ``levels[i]`` is active while ``thresholds[i-1] >= rr > thresholds[i]``
+    (``thresholds`` strictly decreasing, one fewer than ``levels``).  The
+    level is monotone in ``-log rr``: early cycles run the expensive
+    high-precision format, late cycles the cheapest — total basis read
+    traffic drops below the uniform mid-precision baseline while the final
+    explicit residual (always recomputed in ``arith_dtype``) matches it.
+    """
+
+    levels: tuple
+    thresholds: tuple
+
+    def __post_init__(self):
+        if len(self.thresholds) != len(self.levels) - 1:
+            raise ValueError("need len(thresholds) == len(levels) - 1")
+        if not all(a > b for a, b in zip(self.thresholds,
+                                         self.thresholds[1:])):
+            raise ValueError("thresholds must be strictly decreasing")
+
+    def formats(self) -> tuple:
+        return tuple(self.levels)
+
+    def level(self, rr, cycle):
+        lvl = sum((rr < t).astype(jnp.int32) if hasattr(rr, "astype")
+                  else int(rr < t) for t in self.thresholds)
+        return jnp.asarray(lvl, jnp.int32)
+
+    def spec(self):
+        return ("adaptive", tuple(self.levels), tuple(self.thresholds))
+
+
+#: default adaptive ladder: full precision until the residual clears 1e-2,
+#: frsz2_32 to 1e-6, frsz2_16 for the long tail — most cycles run at the
+#: cheapest level, which is what makes total read traffic beat a uniform
+#: frsz2_32 basis.
+_ADAPTIVE_DEFAULT = (("float64", None), ("frsz2_32", 1e-2), ("frsz2_16", 1e-6))
+
+
+def policy_by_name(name: str, *, arith_dtype=jnp.float64, **ctx
+                   ) -> PrecisionPolicy:
+    """Resolve a policy from a name.
+
+    ``static:<fmt>`` — :class:`StaticPolicy` over any registered format.
+    ``adaptive`` — the default ``float64 -> frsz2_32@1e-2 -> frsz2_16@1e-6``.
+    ``adaptive:<f0>,<f1>@<t1>,<f2>@<t2>,...`` — explicit ladder: the first
+    format has no threshold; each later ``fmt@thr`` activates once the
+    restart residual falls below ``thr``.
+    """
+    kind, _, rest = name.partition(":")
+    if kind == "static":
+        if not rest:
+            raise ValueError("static policy needs a format: 'static:<fmt>'")
+        return StaticPolicy(format_by_name(rest, arith_dtype=arith_dtype,
+                                           **ctx))
+    if kind != "adaptive":
+        raise ValueError(f"unknown policy {name!r}")
+    if not rest:
+        ladder = _ADAPTIVE_DEFAULT
+    else:
+        ladder = []
+        for i, part in enumerate(rest.split(",")):
+            fmt_name, _, thr = part.partition("@")
+            if i == 0 and not thr:
+                ladder.append((fmt_name, None))
+            elif not thr:
+                raise ValueError(
+                    f"adaptive level {part!r} needs a threshold 'fmt@thr'")
+            else:
+                ladder.append((fmt_name, float(thr)))
+    levels = tuple(format_by_name(f, arith_dtype=arith_dtype, **ctx)
+                   for f, _ in ladder)
+    thresholds = tuple(t for _, t in ladder[1:])
+    return AdaptivePolicy(levels=levels, thresholds=thresholds)
+
+
+def resolve_policy(policy, storage, arith_dtype) -> PrecisionPolicy:
+    """Combine the ``policy`` / ``storage`` arguments into one policy.
+
+    ``policy`` wins when given (object or name); otherwise the storage
+    format (object, name, or None -> native arith dtype) becomes a
+    :class:`StaticPolicy` — the seed code path, bit for bit.
+    """
+    from repro.core.accessor import NativeFormat
+
+    if policy is not None:
+        if isinstance(policy, PrecisionPolicy):
+            return policy
+        if isinstance(policy, str):
+            return policy_by_name(policy, arith_dtype=arith_dtype)
+        raise ValueError(f"unknown policy {policy!r}")
+    if storage is None:
+        return StaticPolicy(NativeFormat(dtype=arith_dtype))
+    if isinstance(storage, str):
+        return StaticPolicy(format_by_name(storage, arith_dtype=arith_dtype))
+    if isinstance(storage, PrecisionPolicy):
+        return storage
+    return StaticPolicy(storage)

@@ -13,6 +13,7 @@ Both are registered pytrees so they pass through jit / shard_map.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +61,25 @@ class CSR:
         prod = self.data * x[self.indices].astype(self.data.dtype)
         return jax.ops.segment_sum(prod, row_ids, num_segments=self.shape[0])
 
+    def diag(self) -> jax.Array:
+        """(n,) main diagonal (zeros where a row has no diagonal entry)."""
+        row_ids = self.row_ids()
+        on_diag = self.indices == row_ids
+        return jax.ops.segment_sum(
+            jnp.where(on_diag, self.data, 0.0), row_ids,
+            num_segments=self.shape[0])
+
+    def fingerprint(self) -> str:
+        """Content hash of (shape, structure, values) — stable across
+        rebuilds of the same matrix, used by the compiled-solve cache."""
+        fp = getattr(self, "_fingerprint", None)
+        if fp is None:
+            h = hashlib.sha1(repr(self.shape).encode())
+            for a in (self.indptr, self.indices, self.data):
+                h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+            fp = self._fingerprint = h.hexdigest()
+        return fp
+
     def __matmul__(self, x):
         return self.matvec(x)
 
@@ -106,6 +126,22 @@ class ELL:
 
     def matvec(self, x: jax.Array) -> jax.Array:
         return (self.vals * x[self.cols].astype(self.vals.dtype)).sum(axis=1)
+
+    def diag(self) -> jax.Array:
+        """(n,) main diagonal (padding slots carry val 0, so they drop out)."""
+        n = self.shape[0]
+        on_diag = self.cols == jnp.arange(n)[:, None]
+        return jnp.where(on_diag, self.vals, 0.0).sum(axis=1)
+
+    def fingerprint(self) -> str:
+        """Content hash, see :meth:`CSR.fingerprint`."""
+        fp = getattr(self, "_fingerprint", None)
+        if fp is None:
+            h = hashlib.sha1(repr(self.shape).encode())
+            for a in (self.cols, self.vals):
+                h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+            fp = self._fingerprint = h.hexdigest()
+        return fp
 
     def __matmul__(self, x):
         return self.matvec(x)

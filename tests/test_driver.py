@@ -1,7 +1,5 @@
 """Device-resident GMRES driver: parity with the host driver, batching,
 and the storage-format protocol (mixed format, registry extension)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

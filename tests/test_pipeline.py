@@ -1,0 +1,308 @@
+"""Composable cycle pipeline: orthogonalizers, preconditioners, precision
+policies, the content-keyed solve cache, and batched parity across formats."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core.accessor import BasisAccessor, NativeFormat
+from repro.solver import gmres
+from repro.solver.gmres import _SOLVE_CACHE, _SOLVE_CACHE_SIZE, gmres_batched
+from repro.solver.pipeline import (
+    AdaptivePolicy,
+    CGS2Orthogonalizer,
+    JacobiPreconditioner,
+    MGSOrthogonalizer,
+    StaticPolicy,
+    policy_by_name,
+)
+from repro.sparse import PROBLEMS, make_problem, rhs_for
+
+
+def _problem(name="synth:atmosmod", n=512):
+    A, rrn = make_problem(name, n)
+    b, x_sol = rhs_for(A)
+    return A, b, x_sol, rrn
+
+
+# ---------------------------------------------------------------------------
+# preconditioner hook
+# ---------------------------------------------------------------------------
+
+
+def test_jacobi_strictly_fewer_iterations_on_suite():
+    """Acceptance: the Jacobi-preconditioned device-driver solve converges
+    in strictly fewer iterations than unpreconditioned on the problem
+    where the diagonal actually varies, and never meaningfully regresses
+    on the constant-diagonal problems (there Jacobi is an exact scalar
+    scaling, so the iteration count is unchanged up to rounding)."""
+    iters = {}
+    for name in PROBLEMS:
+        A, target = make_problem(name, 216)
+        b, _ = rhs_for(A)
+        kw = dict(m=30, max_iters=4000, target_rrn=target, driver="device")
+        plain = gmres(A, b, **kw)
+        jac = gmres(A, b, precond="jacobi", **kw)
+        iters[name] = (plain.iterations, jac.iterations)
+        assert jac.converged == plain.converged, name
+        assert jac.iterations <= plain.iterations + 2, (name, iters[name])
+    plain_vc, jac_vc = iters["synth:varcoef"]
+    assert jac_vc < plain_vc, iters["synth:varcoef"]
+    assert jac_vc < plain_vc / 5          # decisive, not marginal
+
+
+def test_jacobi_host_device_parity():
+    A, b, _, rrn = _problem("synth:varcoef", n=216)
+    kw = dict(precond="jacobi", m=30, max_iters=4000, target_rrn=rrn)
+    rh = gmres(A, b, driver="host", **kw)
+    rd = gmres(A, b, driver="device", **kw)
+    assert rh.iterations == rd.iterations
+    assert rh.restarts == rd.restarts
+    np.testing.assert_allclose(np.asarray(rh.x), np.asarray(rd.x),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_callable_preconditioner_hook_matches_jacobi():
+    A, b, _, rrn = _problem("synth:varcoef", n=216)
+    inv_d = 1.0 / A.diag()
+    kw = dict(m=30, max_iters=4000, target_rrn=rrn)
+    r_jac = gmres(A, b, precond="jacobi", **kw)
+    r_fn = gmres(A, b, precond=lambda x: x * inv_d.astype(x.dtype), **kw)
+    assert r_fn.iterations == r_jac.iterations
+    np.testing.assert_allclose(np.asarray(r_fn.x), np.asarray(r_jac.x),
+                               rtol=1e-12)
+
+
+def test_jacobi_preserves_true_residual():
+    """Right preconditioning: the reported RRN is the residual of the
+    *original* system, so the returned x solves A x = b."""
+    A, b, x_sol, rrn = _problem("synth:varcoef", n=216)
+    res = gmres(A, b, precond="jacobi", m=30, max_iters=4000,
+                target_rrn=rrn)
+    assert res.converged
+    rrn_check = float(jnp.linalg.norm(b - A.matvec(res.x))
+                      / jnp.linalg.norm(b))
+    np.testing.assert_allclose(rrn_check, res.rrn, rtol=1e-6)
+    err = float(jnp.linalg.norm(res.x - x_sol) / jnp.linalg.norm(x_sol))
+    assert err < 1e-4
+
+
+def test_jacobi_requires_diag():
+    A, b, _, _ = _problem(n=216)
+    with pytest.raises(ValueError, match="diag"):
+        gmres(None, b, precond="jacobi", matvec=lambda v: A.matvec(v), m=5,
+              max_iters=5)
+
+
+def test_jacobi_zero_diagonal_guard():
+    p = JacobiPreconditioner(jnp.asarray([2.0, 0.0, 4.0]))
+    out = np.asarray(p.apply(jnp.asarray([1.0, 1.0, 1.0])))
+    np.testing.assert_allclose(out, [0.5, 1.0, 0.25])
+
+
+# ---------------------------------------------------------------------------
+# precision policies
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_policy_matches_static_with_fewer_bytes():
+    """Acceptance: adaptive f64->frsz2_32->frsz2_16 reaches the same final
+    RRN as static frsz2_32 (within 1e-10) while reading fewer basis bytes
+    (StorageFormat.nbytes accounting carried by the drivers)."""
+    A, b, _, rrn = _problem()
+    kw = dict(m=10, max_iters=6000, target_rrn=rrn)
+    adap = gmres(A, b, policy="adaptive", **kw)
+    stat = gmres(A, b, storage="frsz2_32", **kw)
+    assert adap.converged and stat.converged
+    assert abs(adap.rrn - stat.rrn) < 1e-10
+    assert adap.bytes_read > 0 and stat.bytes_read > 0
+    assert adap.bytes_read < stat.bytes_read
+
+
+def test_adaptive_host_device_parity():
+    A, b, _, rrn = _problem()
+    kw = dict(policy="adaptive", m=10, max_iters=6000, target_rrn=rrn)
+    rh = gmres(A, b, driver="host", **kw)
+    rd = gmres(A, b, driver="device", **kw)
+    assert rh.iterations == rd.iterations
+    assert rh.restarts == rd.restarts
+    np.testing.assert_allclose(rh.bytes_read, rd.bytes_read, rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(rh.x), np.asarray(rd.x),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_policy_name_parsing():
+    pol = policy_by_name("adaptive")
+    assert isinstance(pol, AdaptivePolicy) and len(pol.levels) == 3
+    pol = policy_by_name("adaptive:float64,float32@0.001,frsz2_16@1e-8")
+    assert [f.name for f in pol.levels] == ["float64", "float32", "frsz2_16"]
+    assert pol.thresholds == (0.001, 1e-8)
+    # level index is monotone as the residual falls
+    assert int(pol.level(1.0, 0)) == 0
+    assert int(pol.level(1e-4, 3)) == 1
+    assert int(pol.level(1e-9, 9)) == 2
+    stat = policy_by_name("static:frsz2_32")
+    assert isinstance(stat, StaticPolicy) and stat.fmt.name == "frsz2_32"
+    with pytest.raises(ValueError):
+        policy_by_name("adaptive:float64,frsz2_32")   # missing threshold
+    with pytest.raises(ValueError):
+        policy_by_name("nonsense:float64")
+    with pytest.raises(ValueError):
+        AdaptivePolicy(levels=(NativeFormat(jnp.float64),) * 2,
+                       thresholds=())
+    with pytest.raises(ValueError, match="strictly decreasing"):
+        policy_by_name("adaptive:float64,frsz2_32@1e-6,frsz2_16@1e-6")
+
+
+def test_static_policy_matches_storage_argument():
+    """policy='static:<fmt>' is the same code path as storage='<fmt>'."""
+    A, b, _, rrn = _problem(n=256)
+    kw = dict(m=20, max_iters=2000, target_rrn=rrn)
+    r1 = gmres(A, b, storage="frsz2_32", **kw)
+    r2 = gmres(A, b, policy="static:frsz2_32", **kw)
+    assert r1.iterations == r2.iterations
+    np.testing.assert_array_equal(np.asarray(r1.x), np.asarray(r2.x))
+
+
+# ---------------------------------------------------------------------------
+# orthogonalizers
+# ---------------------------------------------------------------------------
+
+
+def test_cgs2_converges_with_parity_and_more_traffic():
+    A, b, _, rrn = _problem()
+    kw = dict(ortho="cgs2", m=40, max_iters=2000, target_rrn=rrn)
+    rh = gmres(A, b, driver="host", **kw)
+    rd = gmres(A, b, driver="device", **kw)
+    assert rh.converged and rd.converged
+    assert rh.iterations == rd.iterations
+    r_mgs = gmres(A, b, m=40, max_iters=2000, target_rrn=rrn)
+    # two unconditional sweeps read ~2x the basis of the one-shot scheme
+    assert rd.bytes_read > 1.5 * r_mgs.bytes_read
+
+
+def _orthonormalize(ortho, n, m, seed, eta=0.7071067811865475):
+    """Feed nearly-dependent vectors through the orthogonalizer loop."""
+    rng = np.random.default_rng(seed)
+    acc = BasisAccessor(fmt=NativeFormat(jnp.float64), m=m + 1, n=n,
+                        arith_dtype=jnp.float64)
+    store = acc.empty()
+    v = rng.standard_normal(n)
+    store = acc.write_row(store, 0, jnp.asarray(v / np.linalg.norm(v)))
+    rows = jnp.arange(m + 1)
+    for j in range(m):
+        # mostly inside the current span + a tiny new direction: the
+        # hard case for one-shot orthogonalization
+        prev = np.asarray(acc.read_row(store, j))
+        w = jnp.asarray(prev + 1e-7 * rng.standard_normal(n))
+        w, h, hj1 = ortho(acc, store, w, rows <= j, eta)
+        store = acc.write_row(store, j + 1, w / jnp.maximum(hj1, 1e-300))
+    V = np.asarray(acc.read_all(store))
+    G = V @ V.T
+    return np.abs(G - np.eye(m + 1)).max()
+
+
+@settings(max_examples=8)
+@given(st.integers(3, 10), st.integers(0, 10_000))
+def test_cgs2_vs_mgs_orthogonality_property(m, seed):
+    """Property: both schemes keep the basis orthonormal to near machine
+    precision on adversarially correlated inputs; CGS-2 never needs the
+    conditional branch to do it."""
+    err_mgs = _orthonormalize(MGSOrthogonalizer(), 96, m, seed)
+    err_cgs2 = _orthonormalize(CGS2Orthogonalizer(), 96, m, seed)
+    assert err_cgs2 < 1e-12, (m, seed, err_cgs2)
+    assert err_mgs < 1e-10, (m, seed, err_mgs)
+
+
+# ---------------------------------------------------------------------------
+# batched driver across every registered format family + policies
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["float64", "float32", "float16",
+                                 "frsz2_32", "frsz2_16",
+                                 "mixed:2:frsz2_16"])
+def test_gmres_batched_parity_all_formats(fmt):
+    A, b, _, rrn = _problem(n=216)
+    n = b.shape[0]
+    B = jnp.stack([b, 1.5 * b + 0.1 * jnp.sin(jnp.arange(n))])
+    kw = dict(storage=fmt, m=20, max_iters=2000, target_rrn=rrn)
+    batched = gmres_batched(A, B, **kw)
+    # the vmapped matvec fuses differently, so for the coarse formats the
+    # residual's last few ULP can flip a restart decision by one iteration
+    # (the seed batched test documents the same effect); exact for the
+    # precise formats, +-2 for the coarse ones.
+    slack = 0 if fmt in ("float64", "float32", "frsz2_32") else 2
+    for i, rb in enumerate(batched):
+        rs = gmres(A, B[i], driver="device", **kw)
+        assert rb.converged and rs.converged, (fmt, i)
+        assert abs(rb.iterations - rs.iterations) <= slack, (fmt, i)
+        np.testing.assert_allclose(np.asarray(rb.x), np.asarray(rs.x),
+                                   rtol=1e-6, atol=1e-8)
+
+
+def test_gmres_batched_adaptive_policy_parity():
+    A, b, _, rrn = _problem(n=216)
+    n = b.shape[0]
+    B = jnp.stack([b, 1.5 * b + 0.1 * jnp.sin(jnp.arange(n))])
+    kw = dict(policy="adaptive", m=10, max_iters=2000, target_rrn=rrn)
+    batched = gmres_batched(A, B, **kw)
+    for i, rb in enumerate(batched):
+        rs = gmres(A, B[i], driver="device", **kw)
+        assert rb.converged and rs.converged, i
+        assert rb.iterations == rs.iterations, i
+        np.testing.assert_allclose(rb.bytes_read, rs.bytes_read, rtol=1e-12)
+
+
+def test_gmres_batched_jacobi():
+    A, b, _, rrn = _problem("synth:varcoef", n=216)
+    B = jnp.stack([b, 2.0 * b])
+    out = gmres_batched(A, B, precond="jacobi", m=30, max_iters=2000,
+                        target_rrn=rrn)
+    assert all(r.converged for r in out)
+
+
+# ---------------------------------------------------------------------------
+# content-keyed solve cache
+# ---------------------------------------------------------------------------
+
+
+def test_solve_cache_keys_on_operator_content():
+    """Rebuilding the same problem must hit the cache, not grow it."""
+    kw = dict(m=5, max_iters=10, target_rrn=1e-30)
+    A1, _ = make_problem("synth:atmosmod", 64)
+    b1, _ = rhs_for(A1)
+    gmres(A1, b1, **kw)
+    size_after_first = len(_SOLVE_CACHE)
+    A2, _ = make_problem("synth:atmosmod", 64)     # same content, new object
+    assert A2 is not A1 and A2.fingerprint() == A1.fingerprint()
+    b2, _ = rhs_for(A2)
+    gmres(A2, b2, **kw)
+    assert len(_SOLVE_CACHE) == size_after_first
+
+
+def test_solve_cache_eviction_is_bounded():
+    """Distinct operators never grow the cache past its bound."""
+    from repro.sparse.csr import CSR
+
+    A0, _ = make_problem("synth:atmosmod", 64)
+    b, _ = rhs_for(A0)
+    data = np.asarray(A0.data)
+    for i in range(_SOLVE_CACHE_SIZE + 3):
+        Ai = CSR(A0.indptr, A0.indices,
+                 jnp.asarray(data * (1.0 + 0.01 * i)), A0.shape)
+        gmres(Ai, b, m=3, max_iters=3, target_rrn=1e-30)
+        assert len(_SOLVE_CACHE) <= _SOLVE_CACHE_SIZE
+
+
+def test_fingerprint_distinguishes_content():
+    A0, _ = make_problem("synth:atmosmod", 64)
+    from repro.sparse.csr import CSR
+
+    A1 = CSR(A0.indptr, A0.indices, A0.data * 2.0, A0.shape)
+    assert A0.fingerprint() != A1.fingerprint()
+    E = A0.to_ell()
+    assert isinstance(E.fingerprint(), str)
+    np.testing.assert_allclose(np.asarray(E.diag()), np.asarray(A0.diag()),
+                               rtol=1e-14)

@@ -6,8 +6,7 @@ import pytest
 from repro.core.accessor import format_by_name
 from repro.core.emulators import AbsQuantFormat, PwRelQuantFormat
 from repro.solver import gmres
-from repro.sparse import CSR, make_problem, rhs_for
-from repro.sparse.csr import csr_from_coo
+from repro.sparse import make_problem, rhs_for
 
 
 def _small_problem(n=512):
