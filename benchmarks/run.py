@@ -11,6 +11,7 @@
 | Eq. 3   storage accounting    | benchmarks.storage_table      |
 | CB-GMRES accuracy hedge       | benchmarks.mixed_sweep        |
 | LM cells roofline (§Roofline) | benchmarks.lm_roofline        |
+| sharded-solve wire bytes      | benchmarks.shard_wire         |
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ def main(argv=None):
         iteration_table,
         lm_roofline,
         mixed_sweep,
+        shard_wire,
         speedup_model,
         storage_table,
     )
@@ -51,6 +53,10 @@ def main(argv=None):
             n=n, max_iters=2000 if args.quick else 6000,
             ks=(0, 1, 2, 4, 8) if args.quick else mixed_sweep.DEFAULT_KS),
         "lm_roofline": lambda: lm_roofline.run(),
+        # runs in a subprocess with 8 emulated host devices
+        "shard_wire": lambda: shard_wire.run(
+            n=512 if args.quick else 2048,
+            max_iters=1000 if args.quick else 4000),
     }
     failed = []
     for name, fn in suites.items():

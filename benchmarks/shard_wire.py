@@ -1,0 +1,165 @@
+"""Wire bytes per GMRES cycle for the sharded device driver.
+
+The paper's premise is that CB-GMRES is bandwidth-bound; once the basis
+reads are compressed and the whole restart loop runs inside ``shard_map``,
+the surviving traffic is the *collectives*: the orthogonalization partial
+dots (one ``(m+1,)`` psum per inner iteration per sweep), the vector-norm
+scalar psums, and the matvec halo gather.  This harness runs the real
+sharded solve on emulated host devices under every transport and tabulates
+the modelled per-device wire bytes per cycle
+(:func:`repro.dist.collectives.reduce_bytes`), next to the measured
+iteration counts — the compressed-vs-plain-psum comparison the ROADMAP's
+"sharded GMRES end to end" item asks for.
+
+What it shows (and the README documents): FRSZ2 on the wire pays on the
+*dots* reduction once the payload approaches one 128-value block (restart
+length m ≳ 128); the *norm* reductions are scalars, so compressing them
+always ships more bytes than a plain 8-byte psum; and the halo gather
+dwarfs both unless the operator is partitioned, which is the row-sharded
+matvec's job.
+
+Run directly (re-execs itself with emulated devices)::
+
+    PYTHONPATH=src python -m benchmarks.shard_wire [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+TRANSPORTS = ("plain", "compressed", "compressed+norms")
+
+
+def cycle_wire_bytes(m: int, j_stop: int, n_local: int, reorth: int, *,
+                     passes: int, dots_compressed: bool,
+                     norms_compressed: bool) -> dict:
+    """Modelled per-device wire bytes for one restart cycle.
+
+    Per inner iteration: ``passes`` (+1 per fired reorth) dots psums of
+    ``m+1`` partials, and 2 (+1 on reorth) scalar norm psums (w_pre, hj1);
+    per cycle: 2 scalar psums (restart beta + explicit rrn) and
+    ``j_stop + 2`` halo gathers of the local chunk (one matvec per
+    iteration + the two residual recomputations).
+    """
+    from repro.dist.collectives import reduce_bytes
+
+    dots = (j_stop * passes + reorth) * reduce_bytes(
+        m + 1, compressed=dots_compressed)
+    norms = (j_stop * 2 + reorth + 2) * reduce_bytes(
+        1, compressed=norms_compressed)
+    gather = (j_stop + 2) * n_local * 8
+    return dict(dots=dots, norms=norms, gather=gather,
+                total=dots + norms + gather)
+
+
+def _inner(args) -> int:
+    """Runs with XLA_FLAGS already set by the parent."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.core.accessor import format_by_name
+    from repro.solver import gmres
+    from repro.solver.gmres import _cycle_row_reads
+    from repro.sparse import make_problem, rhs_for
+
+    p = args.shards
+    n, m = args.n, args.m
+    A, target = make_problem(args.problem, n)
+    n = A.shape[0]
+    if n % p:
+        raise SystemExit(f"problem rounded n to {n}, not divisible by {p}")
+    b, _ = rhs_for(A)
+    # per-device bytes of one basis row: backs out the solve's actual
+    # re-orthogonalization traffic from its bytes_read accounting
+    row_bytes = format_by_name(args.storage,
+                               arith_dtype=jnp.float64).nbytes(1, n // p)
+
+    print(f"{args.problem} n={n} m={m} shards={p} storage={args.storage}")
+    print(f"{'transport':18s} {'iters':>6s} {'cycles':>7s} "
+          f"{'dots/cyc':>10s} {'norms/cyc':>10s} {'halo/cyc':>10s} "
+          f"{'total/cyc':>10s}  rrn")
+    rows = []
+    for transport in TRANSPORTS:
+        res = gmres(A, b, storage=args.storage, m=m, max_iters=args.max_iters,
+                    target_rrn=target, shard=p, shard_transport=transport)
+        # one restart record per executed cycle (the +1 early-exit record
+        # only occurs for trivially-converged x0, guarded by the max)
+        cycles = max(res.restarts, 1)
+        j_avg = min(max(res.iterations // cycles, 1), m)
+        # rows swept beyond the nominal one-pass model = conditional MGS
+        # re-orth sweeps of ~j_avg+1 rows each (see _cycle_row_reads)
+        nominal_rows = cycles * _cycle_row_reads(j_avg, 1)
+        extra_rows = max(res.bytes_read / row_bytes - nominal_rows, 0.0)
+        reorth_per_cycle = int(round(extra_rows / (j_avg + 1) / cycles))
+        wire = cycle_wire_bytes(
+            m, j_avg, n // p, reorth_per_cycle, passes=1,
+            dots_compressed=transport != "plain",
+            norms_compressed=transport == "compressed+norms")
+        rows.append(dict(transport=transport, iters=res.iterations,
+                         cycles=cycles, rrn=res.rrn,
+                         converged=bool(res.converged), **wire))
+        print(f"{transport:18s} {res.iterations:6d} {cycles:7d} "
+              f"{wire['dots']:10d} {wire['norms']:10d} "
+              f"{wire['gather']:10d} {wire['total']:10d}  {res.rrn:.2e}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+    print("\nnote: dots compression pays once the psum payload nears one "
+          "128-value FRSZ2 block (m+1 >= ~128);\nscalar norm psums are "
+          "always cheaper plain (8 B vs one whole wire block).")
+    return 0
+
+
+def run(n: int = 2048, m: int = 30, shards: int = 8, max_iters: int = 4000,
+        problem: str = "synth:atmosmod", storage: str = "frsz2_32",
+        json_path: str | None = None):
+    """Spawn the measurement in a subprocess with emulated devices
+    (the parent's jax is typically already initialized single-device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={shards}"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "benchmarks.shard_wire", "--inner",
+           "--n", str(n), "--m", str(m), "--shards", str(shards),
+           "--max-iters", str(max_iters), "--problem", problem,
+           "--storage", storage]
+    if json_path:
+        cmd += ["--json", json_path]
+    out = subprocess.run(
+        cmd,
+        env=env, cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, timeout=1200)
+    sys.stdout.write(out.stdout)
+    if out.returncode:
+        sys.stderr.write(out.stderr[-2000:])
+        raise RuntimeError("shard_wire inner run failed")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--inner", action="store_true",
+                    help=argparse.SUPPRESS)   # set by the re-exec parent
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--m", type=int, default=30)
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--max-iters", type=int, default=4000)
+    ap.add_argument("--problem", default="synth:atmosmod")
+    ap.add_argument("--storage", default="frsz2_32")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    if args.inner:
+        return _inner(args)
+    run(n=512 if args.quick else args.n, m=args.m, shards=args.shards,
+        max_iters=args.max_iters, problem=args.problem,
+        storage=args.storage, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

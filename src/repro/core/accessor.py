@@ -45,7 +45,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import frsz2 as F
 
@@ -484,7 +483,16 @@ for _dt in (jnp.float64, jnp.float32, jnp.float16, jnp.bfloat16):
 @register_format("frsz2")
 def _build_frsz2(name, *, arith_dtype=jnp.float64, bs=32, use_kernels=False,
                  rounding="truncate", **ctx):
-    l = int(name.split("_")[1])
+    # "frsz2_<bits>", e.g. "frsz2_16" / "frsz2_21" / "frsz2_32"
+    parts = name.split("_")
+    if len(parts) != 2 or not parts[1].isdigit():
+        raise ValueError(
+            f"malformed frsz2 format name {name!r}: expected "
+            "'frsz2_<bits>' (e.g. 'frsz2_16', 'frsz2_32')")
+    l = int(parts[1])
+    if not 1 <= l <= 64:
+        raise ValueError(
+            f"frsz2 code length must be in [1, 64], got {l} ({name!r})")
     spec = F.FrszSpec(bs=bs, l=l, dtype=arith_dtype, rounding=rounding)
     return FrszFormat(spec=spec, use_kernels=use_kernels)
 
@@ -492,7 +500,11 @@ def _build_frsz2(name, *, arith_dtype=jnp.float64, bs=32, use_kernels=False,
 @register_format("mixed")
 def _build_mixed(name, *, arith_dtype=jnp.float64, **ctx):
     # "mixed" | "mixed:<k>" | "mixed:<k>:<tail-format-name>"
-    parts = name.split(":")
+    parts = name.split(":", 2)
+    if len(parts) > 1 and parts[1] and not parts[1].isdigit():
+        raise ValueError(
+            f"malformed mixed format name {name!r}: the head size must be "
+            "an integer ('mixed:<k>[:<tail>]', e.g. 'mixed:2:frsz2_32')")
     k = int(parts[1]) if len(parts) > 1 and parts[1] else 2
     tail_name = parts[2] if len(parts) > 2 else "frsz2_32"
     tail = format_by_name(tail_name, arith_dtype=arith_dtype, **ctx)
@@ -507,6 +519,10 @@ def _build_sharded(name, *, axis_name="basis", compressed_transport=True,
     if not inner_name:
         raise ValueError("sharded format needs an inner format: "
                          "'sharded:<fmt>'")
+    if inner_name.split(":", 1)[0] == "sharded":
+        raise ValueError(
+            f"nested sharded format {name!r} is not supported: the basis "
+            "splits over exactly one mesh axis ('sharded:<fmt>')")
     inner = format_by_name(inner_name, **ctx)
     return ShardedFormat(inner=inner, axis_name=axis_name,
                          compressed_transport=compressed_transport)

@@ -12,17 +12,23 @@ Three small modules:
                  selection, and NamedSharding trees for params/caches.
   collectives  — FRSZ2-compressed cross-pod gradient all-reduce
                  (``compressed_pmean``) + wire-byte accounting.
+  context      — :class:`~repro.dist.context.DistContext`: the solver's
+                 norm/reduction hook (local vs psum-over-axis), threaded
+                 through the GMRES cycle so the whole device-resident
+                 driver runs inside ``shard_map``.
 
 Also installs a ``jax.shard_map`` forward-compat shim on jax versions that
 only ship ``jax.experimental.shard_map`` (callers use the modern spelling
 with ``axis_names=…, check_vma=…``).
 """
-from repro.dist import act_sharding, collectives, sharding
+from repro.dist import act_sharding, collectives, context, sharding
 from repro.dist.act_sharding import constrain
-from repro.dist.collectives import compressed_pmean, pmean_bytes
+from repro.dist.collectives import compressed_pmean, pmean_bytes, reduce_bytes
+from repro.dist.context import DistContext
 from repro.dist.sharding import (
     batch_axes,
     cache_shardings,
+    driver_partition_specs,
     logical_axes,
     mesh_rules,
     param_shardings,
@@ -31,12 +37,16 @@ from repro.dist.sharding import (
 __all__ = [
     "act_sharding",
     "collectives",
+    "context",
     "sharding",
     "constrain",
     "compressed_pmean",
     "pmean_bytes",
+    "reduce_bytes",
+    "DistContext",
     "batch_axes",
     "cache_shardings",
+    "driver_partition_specs",
     "logical_axes",
     "mesh_rules",
     "param_shardings",

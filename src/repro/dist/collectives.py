@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.core import frsz2 as F
 
-__all__ = ["WIRE_SPEC", "compressed_pmean", "compressed_psum", "pmean_bytes"]
+__all__ = ["WIRE_SPEC", "compressed_pmean", "compressed_psum", "pmean_bytes",
+           "reduce_bytes"]
 
 #: wire codec: frsz2_16 over 128-value blocks (2 B codes + 4 B/128 exps)
 WIRE_SPEC = F.FrszSpec(bs=128, l=16, dtype=jnp.float32)
@@ -90,6 +91,23 @@ def compressed_psum(tree, axis_name: str):
         return total[: x.size].reshape(x.shape).astype(x.dtype)
 
     return jax.tree.map(leaf_psum, tree)
+
+
+def reduce_bytes(n_values: int, *, compressed: bool,
+                 plain_itemsize: int = 8) -> int:
+    """Per-device wire payload for one psum of ``n_values`` values.
+
+    The quantity the sharded-GMRES wire accounting sums per collective:
+    with plain transport each device ships its partial sums at the
+    arithmetic width (f64 by default); with compressed transport it ships
+    FRSZ2 codes + the per-block exponent stream (``WIRE_SPEC``).  Note the
+    block granularity: a payload below one 128-value block still pays for a
+    whole block, which is why compressing *scalar* norm reductions costs
+    more wire than plain psum (``benchmarks/shard_wire.py`` tabulates it).
+    """
+    if compressed:
+        return F.storage_nbytes(n_values, WIRE_SPEC)
+    return n_values * plain_itemsize
 
 
 def pmean_bytes(tree, *, compressed: bool) -> int:

@@ -22,7 +22,6 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = [
@@ -33,6 +32,7 @@ __all__ = [
     "cache_shardings",
     "basis_partition_specs",
     "basis_shardings",
+    "driver_partition_specs",
 ]
 
 
@@ -191,6 +191,43 @@ def basis_partition_specs(store, axis: str = "basis"):
         return P(*spec)
 
     return jax.tree.map(visit, store)
+
+
+def driver_partition_specs(accs, axis: str = "basis", batched: bool = False):
+    """PartitionSpec tree for the device driver's *full* state dict.
+
+    The device-resident GMRES driver's ``lax.while_loop`` state (see
+    ``repro.solver.gmres._device_solve_fn``) runs end to end inside
+    ``shard_map``; this gives the matching out_specs:
+
+      * ``x`` — the solution vector, row-partitioned over ``axis``;
+      * ``stores`` — one Krylov store per policy level, each sharded along
+        the vector dim per :func:`basis_partition_specs`;
+      * ``hist`` / ``rst`` and every scalar (``total``, ``cycles``,
+        ``restarts``, ``converged``, ``stagnated``, ``rrn``, ``prev_last``,
+        ``nbytes``) — device-invariant, replicated.
+
+    ``accs`` is the driver's tuple of ``BasisAccessor``s (anything with an
+    ``empty()`` store builder works — only shapes are inspected, via
+    ``jax.eval_shape``).  ``batched=True`` prepends an unsharded batch dim
+    to every spec, matching a ``vmap`` applied *inside* the ``shard_map``
+    (the multi-device multi-RHS composition).
+    """
+    store_specs = tuple(
+        basis_partition_specs(jax.eval_shape(acc.empty), axis)
+        for acc in accs
+    )
+    specs = dict(
+        x=P(axis),
+        stores=store_specs,
+        total=P(), cycles=P(), restarts=P(), converged=P(),
+        stagnated=P(), rrn=P(), prev_last=P(), nbytes=P(),
+        hist=P(), rst=P(),
+    )
+    if batched:
+        specs = jax.tree.map(lambda p: P(None, *tuple(p)), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return specs
 
 
 def basis_shardings(store, mesh, axis: str = "basis"):

@@ -21,6 +21,12 @@ Pipeline flags (see ``repro.solver.pipeline``):
     ``adaptive:float64,frsz2_32@1e-2,frsz2_16@1e-6``) adds one extra run
     whose storage format is chosen per restart cycle; its row reports the
     policy name as the format.
+
+``--shard P`` runs every solve's restart loop inside ``jax.shard_map``
+over ``P`` devices (vector dim row-partitioned; ``--shard-transport``
+picks plain vs FRSZ2-compressed collectives) — composes with ``--batch``
+for multi-device multi-RHS serving.  See the README's multi-device
+section.
 """
 from __future__ import annotations
 
@@ -50,7 +56,8 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                 max_iters: int = 20000, target_rrn: float | None = None,
                 driver: str = "device", batch: int = 1,
                 precond: str | None = None, ortho: str = "mgs",
-                policy: str | None = None, verbose: bool = True):
+                policy: str | None = None, shard: int | None = None,
+                shard_transport: str = "plain", verbose: bool = True):
     jax.config.update("jax_enable_x64", True)
     A, rrn = make_problem(problem, n)
     if target_rrn is not None:
@@ -63,7 +70,8 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
     for run in runs:
         kw = dict(storage=run["storage"], policy=run["policy"],
                   precond=precond, ortho=ortho, m=m, max_iters=max_iters,
-                  target_rrn=rrn)
+                  target_rrn=rrn, shard=shard,
+                  shard_transport=shard_transport)
         t0 = time.time()
         if batch > 1:
             B = _batch_rhs(A, b, batch)
@@ -83,7 +91,8 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
         rows.append(dict(problem=problem, n=A.shape[0], format=run["label"],
                          driver=driver if batch == 1 else "device",
                          batch=batch, precond=precond or "identity",
-                         ortho=ortho,
+                         ortho=ortho, shard=shard or 1,
+                         shard_transport=shard_transport if shard else None,
                          iters=iters, rrn=res.rrn,
                          converged=conv, x_err=err,
                          restarts=res.restarts, wall_s=wall,
@@ -118,13 +127,21 @@ def main(argv=None):
                     help="per-cycle precision policy run to append, e.g. "
                          "'adaptive' or "
                          "'adaptive:float64,frsz2_32@1e-2,frsz2_16@1e-6'")
+    ap.add_argument("--shard", type=int, default=None,
+                    help="run the whole device-resident solve inside "
+                         "shard_map over this many devices (vector dim "
+                         "row-partitioned; requires n %% shard == 0)")
+    ap.add_argument("--shard-transport", default="plain",
+                    choices=["plain", "compressed", "compressed+norms"],
+                    help="wire format for the sharded solve's collectives")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
     rows = solve_suite(args.problem, args.n, args.formats.split(","),
                        m=args.m, target_rrn=args.target_rrn,
                        driver=args.driver, batch=args.batch,
                        precond=args.precond, ortho=args.ortho,
-                       policy=args.policy)
+                       policy=args.policy, shard=args.shard,
+                       shard_transport=args.shard_transport)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)

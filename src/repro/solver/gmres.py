@@ -79,6 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accessor import BasisAccessor
+from repro.dist.context import LOCAL
 from repro.solver.pipeline import (
     orthogonalizer_by_name,
     resolve_policy,
@@ -100,6 +101,8 @@ class GmresResult:
     restart_rrns: np.ndarray     # explicit RRN measured at each restart
     restarts: int
     bytes_read: float = 0.0      # modelled basis read traffic (bytes)
+    stagnated: bool = False      # stopped by the stagnation guard, not
+                                 # convergence or the iteration budget
 
 
 def _givens(a, b):
@@ -112,12 +115,19 @@ def _givens(a, b):
 
 
 def _cycle(matvec: Callable, acc: BasisAccessor, b_norm, store, w0, beta,
-           eta: float, target: float, ortho, precond):
+           eta: float, target: float, ortho, precond, dist=LOCAL):
     """One GMRES(m) cycle.  w0 = r0 (unnormalized); beta = ||r0||.
 
-    Returns (store, R, g, rrn_est) where R is the rotated Hessenberg
-    (upper triangular in its leading block), g the rotated rhs, and rrn_est
-    the per-inner-iteration implicit residual estimate.
+    Returns (store, R, g, rrn_est, extra_rows) where R is the rotated
+    Hessenberg (upper triangular in its leading block), g the rotated rhs,
+    rrn_est the per-inner-iteration implicit residual estimate, and
+    extra_rows the exact count of basis rows swept by extra (conditional)
+    orthogonalization passes: each live iteration j whose orthogonalizer
+    fired contributes its j+1 live rows — folded into the bytes_read
+    accounting.
+
+    ``dist`` routes vector norms: local (default) or psum-of-local-squares
+    when the cycle runs row-partitioned inside ``shard_map``.
     """
     m = acc.m - 1
     ad = acc.arith_dtype
@@ -132,13 +142,14 @@ def _cycle(matvec: Callable, acc: BasisAccessor, b_norm, store, w0, beta,
     rows = jnp.arange(m + 1)
 
     def body(j, carry):
-        store, R, g, cs, sn, est, alive = carry
+        store, R, g, cs, sn, est, extra_rows, alive = carry
         v = acc.read_row(store, j)
         w = matvec(precond.apply(v)).astype(ad)
-        w_pre = jnp.linalg.norm(w)
+        w_pre = dist.norm(w)
 
         mask = rows <= j
-        w, h, hj1 = ortho(acc, store, w, mask, eta)
+        w, h, hj1, fired = ortho(acc, store, w, mask, eta, dist, w_pre)
+        extra_rows = extra_rows + jnp.where(alive, fired * (j + 1), 0)
 
         breakdown = hj1 <= 1e-30 * w_pre + _TINY
         hj1_safe = jnp.maximum(hj1, _TINY)
@@ -173,12 +184,14 @@ def _cycle(matvec: Callable, acc: BasisAccessor, b_norm, store, w0, beta,
         resid = jnp.abs(g[j + 1]) / b_norm
         est = est.at[j].set(jnp.where(alive, resid, est[jnp.maximum(j - 1, 0)]))
         alive_next = alive & (~breakdown) & (resid > target)
-        return store, R, g, cs, sn, est, alive_next
+        return store, R, g, cs, sn, est, extra_rows, alive_next
 
-    store, R, g, cs, sn, est, alive = jax.lax.fori_loop(
-        0, m, body, (store, R0, g0, cs0, sn0, est0, jnp.asarray(True))
+    store, R, g, cs, sn, est, extra_rows, alive = jax.lax.fori_loop(
+        0, m, body,
+        (store, R0, g0, cs0, sn0, est0, jnp.asarray(0, jnp.int32),
+         jnp.asarray(True))
     )
-    return store, R, g, est
+    return store, R, g, est, extra_rows
 
 
 def _solve_and_update(acc: BasisAccessor, store, R, g, j_stop, x0, precond):
@@ -204,13 +217,17 @@ def _solve_and_update(acc: BasisAccessor, store, R, g, j_stop, x0, precond):
     return x0 + dx
 
 
-def _cycle_row_reads(j_stop, passes: int):
+def _cycle_row_reads(j_stop, passes: int, extra_rows=0):
     """Basis rows touched by one cycle of ``j_stop`` useful iterations.
 
     Per iteration j: 1 read_row + ``passes`` sweeps of dots+combine over the
     j+1 live rows; plus the solution-update combine over j_stop rows.
+    ``extra_rows`` is the exact row count swept by conditional extra passes
+    (MGS's re-orthogonalization): the cycle reports ``sum of j+1 over the
+    live iterations that fired``, so late-firing reorths are charged their
+    true (larger) sweep, not an amortized average.
     """
-    return j_stop * (2 + passes * (j_stop + 1))
+    return j_stop * (2 + passes * (j_stop + 1)) + extra_rows
 
 
 # ---------------------------------------------------------------------------
@@ -273,23 +290,28 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
     restart_rrns: list[float] = []
     total_iters = 0
     converged = False
+    stagnated = False
     bytes_read = 0.0
-    rrn = float(jnp.linalg.norm(b - matvec(x)) / b_norm)
+    # rrn is (re)established at each loop head from the explicit restart
+    # residual (the seed's extra up-front matvec was redundant); the
+    # fallback below only runs for a zero iteration budget, keeping parity
+    # with the device driver's rrn0.
+    rrn = None
 
     while total_iters < max_iters and not converged:
         r = b - matvec(x).astype(arith_dtype)
         beta = jnp.linalg.norm(r)
         restart_rrns.append(float(beta / b_norm))
-        if restart_rrns[-1] <= target_rrn:
+        rrn = restart_rrns[-1]
+        if rrn <= target_rrn:
             converged = True
-            rrn = restart_rrns[-1]
             break
         lvl = int(policy.level(restart_rrns[-1], len(restart_rrns) - 1))
         if lvl not in kernels:
             kernels[lvl] = (make_cycle(accs[lvl]), make_update(accs[lvl]))
             stores[lvl] = accs[lvl].empty()
         cycle, update = kernels[lvl]
-        stores[lvl], R, g, est = cycle(stores[lvl], r, beta)
+        stores[lvl], R, g, est, extra_rows = cycle(stores[lvl], r, beta)
         est_np = np.asarray(est)
         # first inner iteration that met the target (1-based count)
         hit = np.nonzero(est_np <= target_rrn)[0]
@@ -298,7 +320,8 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
         x = update(stores[lvl], R, g, jnp.asarray(j_stop), x)
         history.append(est_np[:j_stop])
         total_iters += j_stop
-        bytes_read += _cycle_row_reads(j_stop, ortho.passes) * (
+        bytes_read += _cycle_row_reads(j_stop, ortho.passes,
+                                       int(extra_rows)) * (
             accs[lvl].nbytes() / accs[lvl].m)
         rrn = float(jnp.linalg.norm(b - matvec(x).astype(arith_dtype)) / b_norm)
         if rrn <= target_rrn:
@@ -310,7 +333,12 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
             if j_stop >= m and len(history) > 4 and np.allclose(
                 history[-1][-1], history[-2][-1], rtol=1e-2
             ):
+                stagnated = True
                 break  # stagnation guard
+
+    if rrn is None:        # max_iters < 1: loop never entered
+        rrn = float(jnp.linalg.norm(b - matvec(x).astype(arith_dtype))
+                    / b_norm)
 
     return GmresResult(
         x=x,
@@ -322,6 +350,7 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
         restart_rrns=np.asarray(restart_rrns),
         restarts=len(restart_rrns),
         bytes_read=bytes_read,
+        stagnated=stagnated,
     )
 
 
@@ -331,7 +360,8 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
 
 
 def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
-                     eta: float, target_rrn: float, ortho, precond):
+                     eta: float, target_rrn: float, ortho, precond,
+                     dist=LOCAL):
     """Build the pure (b, x0) -> state solve function (jit/vmap-able).
 
     Semantics replicate ``_gmres_host`` decision-for-decision so the two
@@ -342,6 +372,12 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
     Multi-level precision policies carry one pre-built store per level and
     dispatch each cycle with ``lax.switch`` on the policy's level index —
     the whole adaptive solve remains a single XLA program.
+
+    ``dist`` distributes the solve: with an axis name bound, ``b``/``x0``
+    are the device-local chunks of row-partitioned vectors, ``matvec`` must
+    be a local matvec (see ``repro.sparse.shard.partition_matvec``), and
+    every norm reduces over the mesh axis — the whole restart loop then
+    runs inside ``shard_map`` (see ``repro.solver.sharded``).
     """
     ad = accs[0].arith_dtype
     n_levels = len(accs)
@@ -351,8 +387,8 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
 
     def solve(b, x0):
         b = b.astype(ad)
-        b_norm = jnp.linalg.norm(b)
-        rrn0 = jnp.linalg.norm(b - matvec(x0).astype(ad)) / b_norm
+        b_norm = dist.norm(b)
+        rrn0 = dist.norm(b - matvec(x0).astype(ad)) / b_norm
 
         init = dict(
             x=x0,
@@ -374,7 +410,7 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
 
         def body(s):
             r = b - matvec(s["x"]).astype(ad)
-            beta = jnp.linalg.norm(r)
+            beta = dist.norm(r)
             rr = beta / b_norm
             rst = s["rst"].at[s["restarts"]].set(rr, mode="drop")
             restarts = s["restarts"] + 1
@@ -384,9 +420,9 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
             def run_cycle_at(k):
                 def run(s):
                     acc = accs[k]
-                    store, R, g, est = _cycle(
+                    store, R, g, est, extra_rows = _cycle(
                         matvec, acc, b_norm, s["stores"][k], r, beta, eta,
-                        target_rrn, ortho, precond
+                        target_rrn, ortho, precond, dist
                     )
                     hit = est <= target_rrn
                     hit_any = jnp.any(hit)
@@ -399,7 +435,7 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
                     hist = s["hist"].at[idx].set(est, mode="drop")
                     total = s["total"] + j_stop
                     cycles = s["cycles"] + 1
-                    rrn = jnp.linalg.norm(b - matvec(x).astype(ad)) / b_norm
+                    rrn = dist.norm(b - matvec(x).astype(ad)) / b_norm
                     conv = rrn <= target_rrn
                     last = est[jnp.maximum(j_stop - 1, 0)]
                     # stagnation guard (host: np.allclose(last, prev, 1e-2))
@@ -409,7 +445,8 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
                            <= 1e-8 + 1e-2 * jnp.abs(s["prev_last"]))
                     )
                     nbytes = s["nbytes"] + (
-                        _cycle_row_reads(j_stop, ortho.passes).astype(ad)
+                        _cycle_row_reads(j_stop, ortho.passes,
+                                         extra_rows).astype(ad)
                         * row_bytes[k])
                     stores = tuple(
                         store if i == k else s["stores"][i]
@@ -455,6 +492,7 @@ def _device_result(state) -> GmresResult:
         restart_rrns=np.asarray(state["rst"][:restarts]),
         restarts=restarts,
         bytes_read=float(state["nbytes"]),
+        stagnated=bool(state["stagnated"]),
     )
 
 
@@ -482,31 +520,47 @@ def _operator_key(A, user_matvec):
     return ("obj", id(A)), (A,)
 
 
-def _cached_solve(A, user_matvec, batched, matvec, accs, policy, m,
-                  max_iters, eta, target, ortho, precond):
-    def build():
-        solve = _device_solve_fn(matvec, accs, policy, m, max_iters, eta,
-                                 target, ortho, precond)
-        return jax.jit(jax.vmap(solve) if batched else solve)
+def _lru_cached(cache: OrderedDict, maxsize: int, make_key, build):
+    """Bounded-LRU memoization shared by the solve caches.
 
+    ``make_key()`` returns the cache key (raise/return something unhashable
+    and the result is built uncached); ``build()`` returns the cached
+    entry — a tuple whose trailing elements may pin objects (preconditioner
+    hooks, callables) whose ``id()`` participates in the key.
+    """
     try:
-        op_key, pins = _operator_key(A, user_matvec)
-        pins = pins + (precond,)     # spec() may key on id(fn): keep it alive
-        key = (op_key, batched, policy.spec(), ortho.name, precond.spec(),
-               accs[0].m, accs[0].n, jnp.dtype(accs[0].arith_dtype).name,
-               m, max_iters, float(eta), float(target))
+        key = make_key()
         hash(key)
     except TypeError:
         return build()
-    ent = _SOLVE_CACHE.get(key)
+    ent = cache.get(key)
     if ent is not None:
-        _SOLVE_CACHE.move_to_end(key)
-        return ent[0]
-    solve = build()
-    _SOLVE_CACHE[key] = (solve, pins)
-    while len(_SOLVE_CACHE) > _SOLVE_CACHE_SIZE:
-        _SOLVE_CACHE.popitem(last=False)
-    return solve
+        cache.move_to_end(key)
+        return ent
+    ent = cache[key] = build()
+    while len(cache) > maxsize:
+        cache.popitem(last=False)
+    return ent
+
+
+def _cached_solve(A, user_matvec, batched, matvec, accs, policy, m,
+                  max_iters, eta, target, ortho, precond):
+    pins: tuple = ()
+
+    def make_key():
+        nonlocal pins
+        op_key, pins = _operator_key(A, user_matvec)
+        pins = pins + (precond,)     # spec() may key on id(fn): keep it alive
+        return (op_key, batched, policy.spec(), ortho.name, precond.spec(),
+                accs[0].m, accs[0].n, jnp.dtype(accs[0].arith_dtype).name,
+                m, max_iters, float(eta), float(target))
+
+    def build():
+        solve = _device_solve_fn(matvec, accs, policy, m, max_iters, eta,
+                                 target, ortho, precond)
+        return jax.jit(jax.vmap(solve) if batched else solve), pins
+
+    return _lru_cached(_SOLVE_CACHE, _SOLVE_CACHE_SIZE, make_key, build)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -530,6 +584,8 @@ def gmres(
     eta: float = 0.7071067811865475,
     matvec: Callable | None = None,
     driver: str = "device",
+    shard: int | None = None,
+    shard_transport: str = "plain",
 ) -> GmresResult:
     """Solve A x = b with restarted (CB-)GMRES.
 
@@ -555,8 +611,28 @@ def gmres(
     whole solve as one jitted ``lax.while_loop``; ``"host"`` is the
     python-looped driver with one device sync per cycle (kept for parity
     testing and driver-overhead measurement).
+
+    ``shard`` runs the entire device-resident solve inside ``jax.shard_map``
+    over that many devices: basis rows, ``b``, ``x``, and the operator's
+    rows split along the vector dim; norms and dot products reduce over the
+    mesh axis (see :mod:`repro.solver.sharded`).  ``shard_transport``
+    selects the collective wire format: ``"plain"`` (exact psum — parity
+    with the single-device solve), ``"compressed"`` (the partial dot
+    products travel as FRSZ2 codes), or ``"compressed+norms"`` (norm
+    reductions compressed too — more wire bytes for a scalar, measured by
+    ``benchmarks/shard_wire.py``; exists for apples-to-apples accounting).
     """
     user_matvec = matvec
+    if shard is not None:
+        if driver != "device":
+            raise ValueError("shard= requires the device driver")
+        from repro.solver.sharded import sharded_gmres
+
+        return sharded_gmres(
+            A, b, x0=x0, storage=storage, policy=policy, precond=precond,
+            ortho=ortho, m=m, max_iters=max_iters, target_rrn=target_rrn,
+            arith_dtype=arith_dtype, eta=eta, matvec=matvec, shard=shard,
+            transport=shard_transport)
     accs, policy, arith_dtype, matvec, precond, ortho = _resolve(
         A, b, storage, policy, m, arith_dtype, matvec, precond, ortho)
     b = b.astype(arith_dtype)
@@ -589,6 +665,8 @@ def gmres_batched(
     arith_dtype: Any = None,
     eta: float = 0.7071067811865475,
     matvec: Callable | None = None,
+    shard: int | None = None,
+    shard_transport: str = "plain",
 ) -> list[GmresResult]:
     """Solve A X[i] = B[i] for a batch of right-hand sides ``B (k, n)``.
 
@@ -597,9 +675,22 @@ def gmres_batched(
     its iteration budget; finished systems are masked by the batching rule).
     The full pipeline (``policy``/``precond``/``ortho``) is supported.
     Returns one :class:`GmresResult` per right-hand side.
+
+    ``shard`` composes multi-device row partitioning with the batch: the
+    solve runs as ``shard_map`` over the vector dim with the ``vmap`` over
+    right-hand sides *inside* — one XLA program, ``k`` systems, ``shard``
+    devices (multi-device multi-RHS serving).  See :func:`gmres`.
     """
     if B.ndim != 2:
         raise ValueError(f"B must be (batch, n), got {B.shape}")
+    if shard is not None:
+        from repro.solver.sharded import sharded_gmres
+
+        return sharded_gmres(
+            A, B, batched=True, x0=X0, storage=storage, policy=policy,
+            precond=precond, ortho=ortho, m=m, max_iters=max_iters,
+            target_rrn=target_rrn, arith_dtype=arith_dtype, eta=eta,
+            matvec=matvec, shard=shard, transport=shard_transport)
     user_matvec = matvec
     accs, policy, arith_dtype, matvec, precond, ortho = _resolve(
         A, B[0], storage, policy, m, arith_dtype, matvec, precond, ortho)

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accessor import StorageFormat, format_by_name
+from repro.dist.context import LOCAL
 
 __all__ = [
     "Orthogonalizer",
@@ -71,16 +72,28 @@ __all__ = [
 class Orthogonalizer:
     """Orthogonalize ``w`` against the masked rows of the basis.
 
-    ``__call__(acc, store, w, mask, eta) -> (w_orth, h, hj1)`` where ``h``
-    is the Hessenberg column against the masked rows and ``hj1 = ||w_orth||``.
-    ``passes`` is the nominal number of full basis sweeps per iteration,
-    used by the drivers' read-traffic accounting.
+    ``__call__(acc, store, w, mask, eta, dist, w_norm) -> (w_orth, h, hj1,
+    fired)`` where ``h`` is the Hessenberg column against the masked rows,
+    ``hj1 = ||w_orth||``, and ``fired`` is an int32 flag for an *extra*
+    basis sweep beyond the nominal ``passes`` this iteration actually ran
+    (MGS's conditional re-orthogonalization) — the drivers fold it into
+    the ``bytes_read`` traffic accounting.
+
+    ``dist`` is a :class:`~repro.dist.context.DistContext`: all vector
+    norms go through ``dist.norm`` so the same orthogonalizer runs on full
+    vectors (single device) and on row-partitioned chunks inside
+    ``shard_map`` (norms become psum-of-local-squares).  ``w_norm`` is the
+    caller's already-reduced ``||w||`` (the cycle computes it for the
+    breakdown check); passing it through avoids a second scalar psum per
+    iteration in sharded solves.  ``passes`` is the nominal number of full
+    basis sweeps per iteration.
     """
 
     name: str = "base"
     passes: int = 1
 
-    def __call__(self, acc, store, w, mask, eta):  # pragma: no cover
+    def __call__(self, acc, store, w, mask, eta, dist=LOCAL,
+                 w_norm=None):  # pragma: no cover
         raise NotImplementedError
 
     def spec(self):
@@ -97,20 +110,21 @@ class MGSOrthogonalizer(Orthogonalizer):
     name = "mgs"
     passes = 1
 
-    def __call__(self, acc, store, w, mask, eta):
-        w_pre = jnp.linalg.norm(w)
+    def __call__(self, acc, store, w, mask, eta, dist=LOCAL, w_norm=None):
+        w_pre = dist.norm(w) if w_norm is None else w_norm
         h = acc.dots(store, w, mask)
         w = w - acc.combine(store, h, mask)
-        hj1 = jnp.linalg.norm(w)
+        hj1 = dist.norm(w)
+        fired = hj1 < eta * w_pre
 
         def reorth(args):
             w, h, _ = args
             u = acc.dots(store, w, mask)
             w2 = w - acc.combine(store, u, mask)
-            return w2, h + u, jnp.linalg.norm(w2)
+            return w2, h + u, dist.norm(w2)
 
-        return jax.lax.cond(hj1 < eta * w_pre, reorth, lambda a: a,
-                            (w, h, hj1))
+        w, h, hj1 = jax.lax.cond(fired, reorth, lambda a: a, (w, h, hj1))
+        return w, h, hj1, fired.astype(jnp.int32)
 
 
 class CGS2Orthogonalizer(Orthogonalizer):
@@ -125,12 +139,13 @@ class CGS2Orthogonalizer(Orthogonalizer):
     name = "cgs2"
     passes = 2
 
-    def __call__(self, acc, store, w, mask, eta):
+    def __call__(self, acc, store, w, mask, eta, dist=LOCAL, w_norm=None):
         h = acc.dots(store, w, mask)
         w = w - acc.combine(store, h, mask)
         u = acc.dots(store, w, mask)
         w = w - acc.combine(store, u, mask)
-        return w, h + u, jnp.linalg.norm(w)
+        # both sweeps are already in the nominal `passes`: no extras
+        return w, h + u, dist.norm(w), jnp.asarray(0, jnp.int32)
 
 
 _ORTHOGONALIZERS = {"mgs": MGSOrthogonalizer, "cgs2": CGS2Orthogonalizer}
@@ -161,6 +176,19 @@ class Preconditioner:
     def spec(self):  # pragma: no cover - overridden
         raise NotImplementedError
 
+    def shard_local(self, axis_name: str, n_local: int) -> "Preconditioner":
+        """Equivalent preconditioner over the device-local vector chunk.
+
+        Called once by the sharded driver before it wraps the solve in
+        ``shard_map``: ``apply`` will then receive ``(n_local,)`` chunks of
+        the row-partitioned vectors.  Formats that hold full-length state
+        (Jacobi's diagonal) return a view that slices by
+        ``jax.lax.axis_index``; elementwise-stateless ones return ``self``.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support sharded application; "
+            "implement shard_local() to run it under gmres(..., shard=...)")
+
 
 class IdentityPreconditioner(Preconditioner):
     """No-op: ``apply`` returns its input unchanged (exact seed parity)."""
@@ -170,6 +198,9 @@ class IdentityPreconditioner(Preconditioner):
 
     def spec(self):
         return ("identity",)
+
+    def shard_local(self, axis_name, n_local):
+        return self
 
 
 class JacobiPreconditioner(Preconditioner):
@@ -198,6 +229,39 @@ class JacobiPreconditioner(Preconditioner):
     def spec(self):
         return ("jacobi", self._digest)
 
+    def shard_local(self, axis_name, n_local):
+        return _LocalJacobiPreconditioner(
+            self.inv_diag, axis_name, n_local, self._digest)
+
+
+class _LocalJacobiPreconditioner(Preconditioner):
+    """Jacobi over the device-local chunk inside ``shard_map``.
+
+    Holds the *full* inverse diagonal (replicated — it is one vector, not
+    the basis) and slices this device's chunk by ``axis_index`` at trace
+    time, so ``apply`` maps ``(n_local,) -> (n_local,)``.
+    """
+
+    def __init__(self, inv_diag, axis_name: str, n_local: int, digest: str):
+        self.inv_diag = inv_diag
+        self.axis_name = axis_name
+        self.n_local = n_local
+        self._digest = digest
+
+    def apply(self, x):
+        i = jax.lax.axis_index(self.axis_name)
+        d = jax.lax.dynamic_slice_in_dim(
+            self.inv_diag, i * self.n_local, self.n_local)
+        return x * d.astype(x.dtype)
+
+    def spec(self):
+        return ("jacobi-local", self._digest, self.axis_name, self.n_local)
+
+    def shard_local(self, axis_name, n_local):
+        if axis_name != self.axis_name or n_local != self.n_local:
+            raise ValueError("preconditioner already sharded differently")
+        return self
+
 
 class CallablePreconditioner(Preconditioner):
     """User hook: any jit-traceable ``fn(x) -> M^{-1} x``.
@@ -215,6 +279,13 @@ class CallablePreconditioner(Preconditioner):
 
     def spec(self):
         return ("callable", self.name if self.name is not None else id(self.fn))
+
+    def shard_local(self, axis_name, n_local):
+        # The hook will see (n_local,) chunks of row-partitioned vectors.
+        # Elementwise hooks are automatically correct only when their state
+        # is chunk-shaped; anything holding full-length arrays must be
+        # written shard-aware by the caller.
+        return self
 
 
 def resolve_preconditioner(precond, A) -> Preconditioner:

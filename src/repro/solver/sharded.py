@@ -1,0 +1,217 @@
+"""The full device-resident GMRES driver inside ``jax.shard_map``.
+
+``repro.solver.gmres`` builds the whole restart loop as one jitted
+``lax.while_loop`` (driver="device").  This module runs that *same* solve
+function end to end across devices: every vector (``b``, ``x``, the Krylov
+basis rows, the residual) is row-partitioned along the vector dim over a
+1-D mesh, and
+
+  * the basis lives in ``sharded:<fmt>`` storage — each device holds the
+    local chunk of every Krylov vector; the orthogonalization dot products
+    reduce over the axis (optionally as FRSZ2 codes on the wire,
+    :func:`repro.dist.collectives.compressed_psum`);
+  * vector norms become psum-of-local-squares through the
+    :class:`~repro.dist.context.DistContext` threaded into the cycle;
+  * the matvec is row-partitioned (gathered-halo ELL rows or a replicated
+    operand, :func:`repro.sparse.shard.partition_matvec`);
+  * the while_loop state's partition specs come from
+    :func:`repro.dist.sharding.driver_partition_specs` — ``x`` and the
+    stores sharded, history buffers and scalars replicated.
+
+Because every reduced quantity (norms, Hessenberg entries, residual
+estimates) is device-invariant after its psum, all devices take identical
+restart/convergence decisions and the data-dependent control flow
+(``while_loop``/``cond``/``switch``) stays in lockstep — the solve is one
+SPMD program with zero host round-trips, which is exactly the paper's
+bandwidth argument carried to the multi-device regime: once basis reads
+are cheap, the surviving traffic is these collectives, so they ride the
+same compressed transport the dots already use.
+
+``gmres_batched(..., shard=...)`` composes the two scaling axes: the
+``vmap`` over right-hand sides runs *inside* the ``shard_map``, so one XLA
+program advances ``k`` systems over ``P`` devices.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.accessor import BasisAccessor, ShardedFormat
+from repro.dist.context import DistContext
+from repro.dist.sharding import driver_partition_specs
+from repro.solver.gmres import (
+    _device_result,
+    _device_solve_fn,
+    _lru_cached,
+    _operator_key,
+)
+from repro.solver.pipeline import (
+    AdaptivePolicy,
+    StaticPolicy,
+    orthogonalizer_by_name,
+    resolve_policy,
+    resolve_preconditioner,
+)
+from repro.sparse.shard import partition_matvec
+
+__all__ = ["sharded_gmres"]
+
+_TRANSPORTS = ("plain", "compressed", "compressed+norms")
+
+
+def _wrap_policy(policy, axis_name: str, compressed_dots: bool):
+    """Wrap every policy level in ShardedFormat.
+
+    The solve's ``shard_transport`` argument is the single authority on
+    the collective wire format: formats that arrive already sharded (e.g.
+    ``storage="sharded:frsz2_32"``, whose builder defaults to compressed
+    transport) are rebuilt onto the requested transport and axis, so
+    ``transport="plain"`` always means the documented exact-psum parity.
+    """
+
+    def wrap(fmt):
+        if isinstance(fmt, ShardedFormat):
+            fmt = fmt.inner
+        return ShardedFormat(inner=fmt, axis_name=axis_name,
+                             compressed_transport=compressed_dots)
+
+    fmts = tuple(wrap(f) for f in policy.formats())
+    if isinstance(policy, StaticPolicy):
+        return StaticPolicy(fmts[0])
+    if isinstance(policy, AdaptivePolicy):
+        return AdaptivePolicy(levels=fmts, thresholds=policy.thresholds)
+    raise ValueError(
+        f"cannot shard custom policy {type(policy).__name__}: give it "
+        "ShardedFormat levels explicitly")
+
+
+# one compiled shard_map program per (operator, pipeline, geometry, mesh);
+# the partitioned operand is cached alongside (ELL conversion is host work).
+_SHARDED_CACHE: OrderedDict = OrderedDict()
+_SHARDED_CACHE_SIZE = 8
+
+
+def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
+                  policy=None, precond=None, ortho="mgs", m: int = 100,
+                  max_iters: int = 20000, target_rrn: float = 1e-14,
+                  arith_dtype=None, eta: float = 0.7071067811865475,
+                  matvec=None, shard: int = 1, transport: str = "plain",
+                  axis_name: str = "basis", partition_mode: str = "auto"):
+    """Run ``gmres``/``gmres_batched`` semantics under ``shard_map``.
+
+    Called through ``gmres(..., shard=P)`` — see that docstring.  ``b`` is
+    ``(n,)``, or ``(k, n)`` with ``batched=True``; returns the matching
+    :class:`~repro.solver.gmres.GmresResult` (or list of them).
+    """
+    if transport not in _TRANSPORTS:
+        raise ValueError(f"unknown shard transport {transport!r}; "
+                         f"expected one of {_TRANSPORTS}")
+    if matvec is not None:
+        raise ValueError(
+            "shard= needs an operator with partitionable rows (CSR/ELL); "
+            "a bare matvec callable cannot be row-partitioned")
+    p_dev = int(shard)
+    devices = jax.devices()
+    if p_dev < 1 or p_dev > len(devices):
+        raise ValueError(
+            f"shard={p_dev} but only {len(devices)} devices are visible")
+
+    b = jnp.asarray(b)
+    n = b.shape[-1]
+    if n % p_dev:
+        raise ValueError(f"vector dim {n} does not divide over "
+                         f"{p_dev} devices")
+    n_local = n // p_dev
+    if arith_dtype is None:
+        arith_dtype = b.dtype
+
+    compressed_dots = transport in ("compressed", "compressed+norms")
+    policy = _wrap_policy(resolve_policy(policy, storage, arith_dtype),
+                          axis_name, compressed_dots)
+    accs = tuple(
+        BasisAccessor(fmt=f, m=m + 1, n=n_local, arith_dtype=arith_dtype)
+        for f in policy.formats()
+    )
+    precond_obj = resolve_preconditioner(precond, A).shard_local(
+        axis_name, n_local)
+    ortho_obj = orthogonalizer_by_name(ortho)
+    dist = DistContext(axis_name=axis_name,
+                       compressed_norms=transport == "compressed+norms")
+
+    solve, operand = _cached_sharded_solve(
+        A, batched, accs, policy, m, max_iters, eta, target_rrn, ortho_obj,
+        precond_obj, dist, p_dev, axis_name, partition_mode)
+
+    b = b.astype(arith_dtype)
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    else:
+        x0 = jnp.asarray(x0).astype(arith_dtype)
+        if x0.shape != b.shape:
+            raise ValueError(f"x0 shape {x0.shape} != b shape {b.shape}")
+
+    states = solve(operand, b, x0)
+    if not batched:
+        return _device_result(states)
+    return [
+        _device_result(jax.tree.map(lambda a: a[i], states))
+        for i in range(b.shape[0])
+    ]
+
+
+def _build_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
+                         target_rrn, ortho, precond, dist, p_dev, axis_name,
+                         partition_mode):
+    operand, op_specs, local_mv = partition_matvec(
+        A, p_dev, axis_name, mode=partition_mode)
+    mesh = Mesh(np.asarray(jax.devices()[:p_dev]), (axis_name,))
+
+    def solve_local(op, b_loc, x0_loc):
+        mv = lambda v: local_mv(op, v)  # noqa: E731
+        fn = _device_solve_fn(mv, accs, policy, m, max_iters, eta,
+                              target_rrn, ortho, precond, dist)
+        return fn(b_loc, x0_loc)
+
+    if batched:
+        def run(op, B_loc, X0_loc):
+            return jax.vmap(lambda bb, xx: solve_local(op, bb, xx))(
+                B_loc, X0_loc)
+    else:
+        run = solve_local
+
+    vec_spec = P(None, axis_name) if batched else P(axis_name)
+    state_specs = driver_partition_specs(accs, axis_name, batched=batched)
+    sm = jax.shard_map(run, mesh=mesh,
+                       in_specs=(op_specs, vec_spec, vec_spec),
+                       out_specs=state_specs, axis_names={axis_name},
+                       check_vma=False)
+    return jax.jit(sm), operand
+
+
+def _cached_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
+                          target_rrn, ortho, precond, dist, p_dev, axis_name,
+                          partition_mode):
+    pins: tuple = ()
+
+    def make_key():
+        nonlocal pins
+        op_key, pins = _operator_key(A, None)
+        pins = pins + (precond,)
+        return (op_key, batched, policy.spec(), ortho.name, precond.spec(),
+                dist.spec(), accs[0].m, accs[0].n,
+                jnp.dtype(accs[0].arith_dtype).name, m, max_iters,
+                float(eta), float(target_rrn), p_dev, axis_name,
+                partition_mode)
+
+    def build():
+        solve, operand = _build_sharded_solve(
+            A, batched, accs, policy, m, max_iters, eta, target_rrn, ortho,
+            precond, dist, p_dev, axis_name, partition_mode)
+        return solve, operand, pins
+
+    ent = _lru_cached(_SHARDED_CACHE, _SHARDED_CACHE_SIZE, make_key, build)
+    return ent[0], ent[1]

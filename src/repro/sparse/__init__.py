@@ -1,3 +1,5 @@
-"""Sparse formats (CSR/ELL) and the synthetic CFD problem suite."""
+"""Sparse formats (CSR/ELL), row-partitioned SpMV, and the synthetic CFD
+problem suite."""
 from repro.sparse.csr import CSR, ELL, csr_from_coo
 from repro.sparse.problems import PROBLEMS, make_problem, problem_suite, rhs_for
+from repro.sparse.shard import partition_matvec

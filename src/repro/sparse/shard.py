@@ -1,0 +1,101 @@
+"""Row-partitioned SpMV for the sharded GMRES driver (inside shard_map).
+
+The sharded solver keeps every vector row-partitioned over the mesh axis:
+each device owns an ``(n_local,)`` chunk.  The Arnoldi matvec therefore
+needs ``y_local = (A x)_local`` from ``x_local``.  Two applications are
+provided, selected by :func:`partition_matvec`:
+
+* ``"rows"`` (default for CSR/ELL) — **row-partitioned, gathered-halo**:
+  the operator is converted to ELL and its ``(n, w)`` ``cols``/``vals``
+  arrays enter ``shard_map`` partitioned along dim 0, so each device stores
+  only its ``n/P`` rows.  The operand vector is ``all_gather``ed to full
+  length (the stencil problems' bandwidth makes the true halo most of the
+  vector anyway; a tiled gather is the simple, always-correct halo), then
+  the local rows contract against it.  Per-device operator memory: ``1/P``
+  of the matrix.
+
+* ``"replicated"`` — **replicated-operand**: the operator enters
+  ``shard_map`` fully replicated (spec ``P()`` on every leaf), each device
+  computes the full ``A x`` and keeps its own row slice.  No conversion,
+  works for any pytree operator with ``.matvec``; costs full-matrix memory
+  and flops per device, so it is the fallback, not the default.
+
+Both return the same triple, ready to splice into a ``shard_map`` call::
+
+    operand, in_specs, local_mv = partition_matvec(A, n_shards=P)
+    # shard_map(f, in_specs=(in_specs, ...)); inside f:
+    y_local = local_mv(operand_local, x_local)
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["partition_matvec"]
+
+
+def _ell_arrays(A):
+    """(cols, vals) of an ELL view of ``A``; None if not convertible."""
+    if hasattr(A, "cols") and hasattr(A, "vals"):
+        return A.cols, A.vals
+    if hasattr(A, "to_ell"):
+        E = A.to_ell()
+        return E.cols, E.vals
+    return None
+
+
+def partition_matvec(A, n_shards: int, axis_name: str = "basis",
+                     mode: str = "auto"):
+    """Split ``A`` for row-parallel SpMV under ``shard_map``.
+
+    Returns ``(operand, in_specs, local_matvec)`` where ``operand`` is the
+    pytree of arrays to pass into ``shard_map``, ``in_specs`` the matching
+    PartitionSpec tree, and ``local_matvec(operand_local, x_local)`` maps
+    this device's ``(n_local,)`` chunk of ``x`` to its chunk of ``A x``.
+    """
+    n = A.shape[0]
+    if A.shape[0] != A.shape[1]:
+        raise ValueError(f"matvec partitioning needs a square operator, "
+                         f"got shape {A.shape}")
+    if n % n_shards:
+        raise ValueError(
+            f"operator dim {n} does not divide over {n_shards} shards")
+    n_local = n // n_shards
+
+    ell = _ell_arrays(A) if mode in ("auto", "rows") else None
+    if mode == "auto":
+        mode = "rows" if ell is not None else "replicated"
+
+    if mode == "rows":
+        if ell is None:
+            raise ValueError(
+                f"mode='rows' needs an ELL-convertible operator "
+                f"(got {type(A).__name__}); use mode='replicated'")
+        cols, vals = ell
+        operand = (cols, vals)
+        in_specs = (P(axis_name, None), P(axis_name, None))
+
+        def local_matvec(op, x_local):
+            cols_l, vals_l = op                       # (n_local, w) each
+            x = jax.lax.all_gather(x_local, axis_name, tiled=True)
+            return (vals_l * x[cols_l].astype(vals_l.dtype)).sum(axis=1)
+
+        return operand, in_specs, local_matvec
+
+    if mode == "replicated":
+        row_ids = A.row_ids() if hasattr(A, "row_ids") else None
+        operand = (A, row_ids)
+        in_specs = jax.tree.map(lambda _: P(), operand)
+
+        def local_matvec(op, x_local):
+            A_full, rid = op
+            x = jax.lax.all_gather(x_local, axis_name, tiled=True)
+            y = (A_full.matvec(x, row_ids=rid) if rid is not None
+                 else A_full.matvec(x))
+            i = jax.lax.axis_index(axis_name)
+            return jax.lax.dynamic_slice_in_dim(y, i * n_local, n_local)
+
+        return operand, in_specs, local_matvec
+
+    raise ValueError(f"unknown partition mode {mode!r}; "
+                     "expected 'auto', 'rows', or 'replicated'")

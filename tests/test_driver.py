@@ -63,6 +63,76 @@ def test_device_driver_stagnation_parity():
     assert rh.restarts == rd.restarts
 
 
+def test_stagnated_flag_reported_by_both_drivers(monkeypatch):
+    """Stagnation must be distinguishable from plain non-convergence: the
+    guard's cutoff is surfaced as GmresResult.stagnated by both drivers
+    (previously the device flag was dropped and the host break invisible).
+
+    The guard only fires when the *implicit* estimate reaches the target at
+    a cycle's final inner iteration while the explicit residual is frozen —
+    an optimistic-estimate stall that real problems hit only through codec
+    noise.  To pin the branch deterministically, stub the cycle: est hits
+    the target exactly at the last position, the update is a no-op (empty
+    store => zero combine), so every cycle repeats identically and the
+    guard must cut the solve off at its 5th repeating cycle in both
+    drivers, at the same iteration."""
+    import importlib
+
+    gmres_mod = importlib.import_module("repro.solver.gmres")
+    m, target = 4, 1e-8
+
+    def fake_cycle(matvec, acc, b_norm, store, w0, beta, eta, tgt, ortho,
+                   precond, dist=None):
+        ad = acc.arith_dtype
+        R = jnp.eye(m + 1, m, dtype=ad)          # benign back-substitution
+        g = jnp.zeros((m + 1,), ad)              # y == 0 => x unchanged
+        # decreasing est that first meets the target at the last position
+        # (interior multipliers strictly > 1, final strictly < 1)
+        est = jnp.asarray(target * np.linspace(2.0, 0.9, m), ad)
+        return store, R, g, est, jnp.asarray(0, jnp.int32)
+
+    monkeypatch.setattr(gmres_mod, "_cycle", fake_cycle)
+    # fresh solve cache: the device program compiled from the fake cycle
+    # must not outlive the test (the cache is process-global)
+    from collections import OrderedDict
+
+    monkeypatch.setattr(gmres_mod, "_SOLVE_CACHE", OrderedDict())
+    A, b, _, _ = _problem(64)
+    kw = dict(storage="float64", m=m, max_iters=97, target_rrn=target)
+    rh = gmres(A, b, driver="host", **kw)
+    rd = gmres(A, b, driver="device", **kw)
+    for r in (rh, rd):
+        assert not r.converged
+        assert r.stagnated
+        assert r.iterations == 5 * m      # guard patience: 5th flat cycle
+    assert rh.restarts == rd.restarts
+
+
+def test_not_stagnated_on_budget_exhaustion_or_convergence():
+    """Iteration-budget exhaustion and normal convergence both report
+    stagnated=False (stagnation is not conflated with non-convergence)."""
+    A, _ = make_problem("synth:widerange", 256)
+    b, _ = rhs_for(A)
+    rb = gmres(A, b, storage="frsz2_32", m=20, max_iters=40,
+               target_rrn=1e-12)
+    assert not rb.converged and not rb.stagnated
+    A2, b2, _, rrn2 = _problem(216)
+    rc = gmres(A2, b2, m=20, max_iters=2000, target_rrn=rrn2)
+    assert rc.converged and not rc.stagnated
+
+
+def test_zero_iteration_budget_reports_initial_residual():
+    """max_iters=0: both drivers report the true initial residual (the
+    host loop never runs; its rrn must not be a sentinel)."""
+    A, b, _, _ = _problem(64)
+    rh = gmres(A, b, driver="host", m=5, max_iters=0)
+    rd = gmres(A, b, driver="device", m=5, max_iters=0)
+    assert not rh.converged and not rd.converged
+    assert rh.iterations == rd.iterations == 0
+    np.testing.assert_allclose(rh.rrn, rd.rrn, rtol=1e-12)
+    np.testing.assert_allclose(rh.rrn, 1.0, rtol=1e-12)   # x0 = 0
+
+
 def test_device_driver_trivial_rhs_converges_immediately():
     A, b, _, _ = _problem(216)
     x0 = jnp.asarray(np.linalg.solve(np.asarray(A.to_dense()),
@@ -95,6 +165,30 @@ def test_gmres_batched_matches_single():
         # within a few ULP of the (tiny) restart residuals
         np.testing.assert_allclose(rb.restart_rrns, rs.restart_rrns,
                                    rtol=1e-6)
+
+
+def test_gmres_batched_nonzero_x0_matches_single():
+    """Batched parity with a *nonzero* initial guess (only zero-init was
+    covered before): each system must follow the same trajectory as its
+    single solve started from the same x0."""
+    A, b, _, rrn = _problem(216)
+    n = b.shape[0]
+    t = jnp.arange(n, dtype=b.dtype)
+    B = jnp.stack([b, 1.5 * b + 0.1 * jnp.sin(t)])
+    X0 = jnp.stack([0.05 * jnp.cos(t), 0.01 * t / n])
+    kw = dict(storage="float64", m=20, max_iters=2000, target_rrn=rrn)
+    batched = gmres_batched(A, B, X0=X0, **kw)
+    for i, rb in enumerate(batched):
+        rs = gmres(A, B[i], x0=X0[i], driver="device", **kw)
+        assert rb.converged and rs.converged, i
+        assert rb.iterations == rs.iterations, i
+        assert rb.restarts == rs.restarts, i
+        np.testing.assert_allclose(np.asarray(rb.x), np.asarray(rs.x),
+                                   rtol=1e-8, atol=1e-10)
+        # a nonzero x0 must actually matter: zero-init takes a different
+        # first restart residual
+        rz = gmres(A, B[i], driver="device", **kw)
+        assert abs(rz.restart_rrns[0] - rs.restart_rrns[0]) > 1e-8, i
 
 
 def test_gmres_batched_independent_schedules():

@@ -1,0 +1,65 @@
+"""format_by_name: malformed names must fail with actionable ValueErrors
+(not bare IndexError/ValueError from the parsing internals), and nested
+sharded formats are rejected."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.accessor import (
+    FrszFormat,
+    MixedFormat,
+    ShardedFormat,
+    format_by_name,
+)
+
+
+def test_frsz2_missing_bitwidth_is_a_clear_error():
+    with pytest.raises(ValueError, match="frsz2_<bits>"):
+        format_by_name("frsz2")
+
+
+def test_frsz2_non_integer_bitwidth_is_a_clear_error():
+    with pytest.raises(ValueError, match="frsz2_<bits>"):
+        format_by_name("frsz2_xx")
+
+
+def test_frsz2_out_of_range_bitwidth():
+    with pytest.raises(ValueError, match=r"\[1, 64\]"):
+        format_by_name("frsz2_65")
+
+
+def test_mixed_non_integer_k_is_a_clear_error():
+    with pytest.raises(ValueError, match="head size must be\n?.*integer"):
+        format_by_name("mixed:x")
+
+
+def test_mixed_bad_tail_propagates_tail_error():
+    with pytest.raises(ValueError, match="frsz2_<bits>"):
+        format_by_name("mixed:2:frsz2")
+
+
+def test_sharded_nesting_rejected():
+    with pytest.raises(ValueError, match="nested sharded"):
+        format_by_name("sharded:sharded:float32")
+
+
+def test_sharded_missing_inner_rejected():
+    with pytest.raises(ValueError, match="inner format"):
+        format_by_name("sharded")
+    with pytest.raises(ValueError, match="inner format"):
+        format_by_name("sharded:")
+
+
+def test_unknown_name_still_unknown():
+    with pytest.raises(ValueError, match="unknown storage format"):
+        format_by_name("float128")
+
+
+def test_well_formed_names_still_resolve():
+    f = format_by_name("frsz2_16", arith_dtype=jnp.float64)
+    assert isinstance(f, FrszFormat) and f.spec.l == 16
+    m = format_by_name("mixed:3:frsz2_16")
+    assert isinstance(m, MixedFormat) and m.k == 3
+    assert m.tail.name == "frsz2_16"
+    s = format_by_name("sharded:mixed:2:frsz2_32")
+    assert isinstance(s, ShardedFormat)
+    assert isinstance(s.inner, MixedFormat) and s.inner.k == 2

@@ -170,6 +170,16 @@ def test_static_policy_matches_storage_argument():
 # ---------------------------------------------------------------------------
 
 
+def _nominal_bytes(iterations, m, passes, row_bytes):
+    """Read-traffic model assuming full cycles + a partial last one and no
+    extra (conditional) sweeps."""
+    from repro.solver.gmres import _cycle_row_reads
+
+    full, last = divmod(iterations, m)
+    return sum(_cycle_row_reads(j, passes) * row_bytes
+               for j in [m] * full + ([last] if last else []))
+
+
 def test_cgs2_converges_with_parity_and_more_traffic():
     A, b, _, rrn = _problem()
     kw = dict(ortho="cgs2", m=40, max_iters=2000, target_rrn=rrn)
@@ -178,8 +188,17 @@ def test_cgs2_converges_with_parity_and_more_traffic():
     assert rh.converged and rd.converged
     assert rh.iterations == rd.iterations
     r_mgs = gmres(A, b, m=40, max_iters=2000, target_rrn=rrn)
-    # two unconditional sweeps read ~2x the basis of the one-shot scheme
-    assert rd.bytes_read > 1.5 * r_mgs.bytes_read
+    # two unconditional sweeps read ~2x the *nominal* one-pass traffic; the
+    # conditional scheme's actual traffic can approach parity when the
+    # "twice is enough" criterion fires often (it does on this stencil),
+    # but can never exceed cgs2's unconditional double sweep per iteration
+    n = b.shape[0]
+    assert rd.bytes_read > 1.5 * _nominal_bytes(r_mgs.iterations, 40, 1,
+                                                8 * n)
+    assert rd.bytes_read >= r_mgs.bytes_read
+    # cgs2 itself has no conditional sweeps: its accounting is exactly the
+    # two-pass nominal model
+    assert rd.bytes_read == _nominal_bytes(rd.iterations, 40, 2, 8 * n)
 
 
 def _orthonormalize(ortho, n, m, seed, eta=0.7071067811865475):
@@ -196,7 +215,7 @@ def _orthonormalize(ortho, n, m, seed, eta=0.7071067811865475):
         # hard case for one-shot orthogonalization
         prev = np.asarray(acc.read_row(store, j))
         w = jnp.asarray(prev + 1e-7 * rng.standard_normal(n))
-        w, h, hj1 = ortho(acc, store, w, rows <= j, eta)
+        w, h, hj1, _ = ortho(acc, store, w, rows <= j, eta)
         store = acc.write_row(store, j + 1, w / jnp.maximum(hj1, 1e-300))
     V = np.asarray(acc.read_all(store))
     G = V @ V.T
@@ -213,6 +232,55 @@ def test_cgs2_vs_mgs_orthogonality_property(m, seed):
     err_cgs2 = _orthonormalize(CGS2Orthogonalizer(), 96, m, seed)
     assert err_cgs2 < 1e-12, (m, seed, err_cgs2)
     assert err_mgs < 1e-10, (m, seed, err_mgs)
+
+
+def _near_identity_problem(n=96, eps=1e-5, seed=0):
+    """A = I + eps*R: every Arnoldi direction is nearly inside the current
+    span, so MGS's "twice is enough" criterion fires at every iteration."""
+    from repro.sparse.csr import csr_from_coo
+
+    rng = np.random.default_rng(seed)
+    dense = np.eye(n) + eps * rng.standard_normal((n, n))
+    rows, cols = np.nonzero(np.ones((n, n), bool))
+    return csr_from_coo(rows, cols, dense[rows, cols], (n, n))
+
+
+def test_mgs_reorth_traffic_accounted():
+    """bytes_read must reflect *actual* orthogonalization passes: when the
+    conditional re-orthogonalization fires, the dots+combine traffic
+    exceeds the nominal passes==1 model (ISSUE 3 satellite)."""
+    from repro.solver.gmres import _cycle_row_reads
+
+    A = _near_identity_problem()
+    n = A.shape[0]
+    b = jnp.asarray(np.sin(np.arange(n)))
+    kw = dict(storage="float64", m=10, max_iters=100, target_rrn=1e-12)
+    rd = gmres(A, b, driver="device", **kw)
+    rh = gmres(A, b, driver="host", **kw)
+    assert rd.converged and rd.restarts == 1, (rd.iterations, rd.restarts)
+    row_bytes = 8 * n
+    nominal = _cycle_row_reads(rd.iterations, 1) * row_bytes
+    # every live iteration j re-orthogonalized: the extra sweep at j reads
+    # its j+1 live rows, so the exact extra row count is sum_{j<it}(j+1)
+    extra = rd.iterations * (rd.iterations + 1) // 2
+    expected = _cycle_row_reads(rd.iterations, 1, extra) * row_bytes
+    assert rd.bytes_read > nominal, (rd.bytes_read, nominal)
+    assert rd.bytes_read == expected, (rd.bytes_read, expected)
+    # host and device account identically
+    np.testing.assert_allclose(rh.bytes_read, rd.bytes_read, rtol=1e-12)
+
+
+def test_mgs_traffic_bounded_by_single_and_double_pass_models():
+    """MGS's actual accounting sits between the nominal one-pass model
+    (reorth never fires) and the two-pass model (fires every iteration)."""
+    A, b, _, rrn = _problem(n=216)
+    res = gmres(A, b, storage="float64", m=20, max_iters=2000,
+                target_rrn=rrn)
+    assert res.converged
+    row_bytes = 8 * b.shape[0]
+    lo = _nominal_bytes(res.iterations, 20, 1, row_bytes)
+    hi = _nominal_bytes(res.iterations, 20, 2, row_bytes)
+    assert lo <= res.bytes_read <= hi, (lo, res.bytes_read, hi)
 
 
 # ---------------------------------------------------------------------------

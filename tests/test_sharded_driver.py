@@ -1,0 +1,213 @@
+"""End-to-end sharded GMRES: the full device-resident driver inside
+shard_map must match the single-device driver.
+
+Acceptance (ISSUE 3): on 8 emulated host devices, `gmres(..., shard=8)`
+and `gmres_batched(..., shard=8)` reproduce the single-device driver's
+iteration count and final RRN — exactly for float64 storage (plain psum
+transport is the same sum in a different reduction order), and within the
+documented codec tolerance for sharded frsz2 storage with compressed
+transport (the frsz2_16 wire codec perturbs partial dots by ~2^-11 of the
+per-block max).
+
+Same isolation pattern as test_collectives_multidev: the 8-device mesh
+lives in a subprocess (spawned with XLA_FLAGS) so the main test process
+keeps its single real device.  The shard=1 tests below run in-process:
+shard_map over one device exercises the whole code path (partitioned
+operand, DistContext psums, state specs) on any machine.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.solver import gmres
+from repro.solver.gmres import gmres_batched
+from repro.sparse import make_problem, rhs_for
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.solver import gmres
+from repro.solver.gmres import gmres_batched
+from repro.sparse import make_problem, rhs_for
+
+A, target = make_problem("synth:atmosmod", 512)
+n = A.shape[0]
+b, _ = rhs_for(A)
+kw = dict(m=20, max_iters=2000, target_rrn=target)
+
+out = {}
+
+# -- float64, plain transport: exact-parity regime --------------------------
+r1 = gmres(A, b, storage="float64", **kw)
+r8 = gmres(A, b, storage="float64", shard=8, **kw)
+out["f64"] = dict(it1=r1.iterations, it8=r8.iterations,
+                  rrn1=r1.rrn, rrn8=r8.rrn,
+                  conv=bool(r1.converged and r8.converged),
+                  restarts_eq=r1.restarts == r8.restarts,
+                  x_err=float(np.max(np.abs(np.asarray(r1.x)
+                                            - np.asarray(r8.x)))))
+
+# -- frsz2_32 basis + compressed wire transport -----------------------------
+c1 = gmres(A, b, storage="frsz2_32", **kw)
+c8 = gmres(A, b, storage="frsz2_32", shard=8,
+           shard_transport="compressed", **kw)
+out["frsz2"] = dict(it1=c1.iterations, it8=c8.iterations,
+                    rrn1=c1.rrn, rrn8=c8.rrn,
+                    conv=bool(c1.converged and c8.converged))
+
+# -- jacobi preconditioning, sharded ----------------------------------------
+Av, tv = make_problem("synth:varcoef", 512)
+bv, _ = rhs_for(Av)
+j1 = gmres(Av, bv, precond="jacobi", m=20, max_iters=2000, target_rrn=tv)
+j8 = gmres(Av, bv, precond="jacobi", m=20, max_iters=2000, target_rrn=tv,
+           shard=8)
+out["jacobi"] = dict(it1=j1.iterations, it8=j8.iterations,
+                     conv=bool(j1.converged and j8.converged))
+
+# -- batched over sharded (vmap inside shard_map) ---------------------------
+t = jnp.arange(n, dtype=jnp.float64)
+B = jnp.stack([b, 1.5 * b + 0.1 * jnp.sin(t)])
+X0 = jnp.stack([0.01 * jnp.cos(t), jnp.zeros_like(b)])
+bat = gmres_batched(A, B, X0=X0, storage="float64", shard=8, **kw)
+refs = [gmres(A, B[i], x0=X0[i], storage="float64", **kw) for i in range(2)]
+out["batched"] = [
+    dict(itb=rb.iterations, its=rs.iterations,
+         rrnb=rb.rrn, rrns=rs.rrn,
+         conv=bool(rb.converged and rs.converged))
+    for rb, rs in zip(bat, refs)
+]
+
+print(json.dumps(out))
+"""
+
+
+def _run_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_driver_end_to_end_multidevice():
+    res = _run_subprocess()
+
+    f64 = res["f64"]
+    assert f64["conv"] and f64["restarts_eq"], f64
+    assert f64["it1"] == f64["it8"], f64
+    assert abs(f64["rrn1"] - f64["rrn8"]) <= 1e-10, f64
+    assert f64["x_err"] < 1e-10, f64
+
+    # frsz2 + compressed wire: codec tolerance (frsz2_16 wire ~ 2^-11)
+    frsz = res["frsz2"]
+    assert frsz["conv"], frsz
+    assert abs(frsz["it1"] - frsz["it8"]) <= 2, frsz
+    assert abs(frsz["rrn1"] - frsz["rrn8"]) <= 1e-10, frsz
+
+    jac = res["jacobi"]
+    assert jac["conv"], jac
+    assert jac["it1"] == jac["it8"], jac
+
+    for i, entry in enumerate(res["batched"]):
+        assert entry["conv"], (i, entry)
+        assert entry["itb"] == entry["its"], (i, entry)
+        assert abs(entry["rrnb"] - entry["rrns"]) <= 1e-10, (i, entry)
+
+
+# ---------------------------------------------------------------------------
+# shard=1: the whole sharded code path on a single device (tier-1 on any box)
+# ---------------------------------------------------------------------------
+
+
+def _problem(n=216):
+    A, rrn = make_problem("synth:atmosmod", n)
+    b, _ = rhs_for(A)
+    return A, b, rrn
+
+
+def test_shard1_matches_unsharded():
+    A, b, rrn = _problem()
+    kw = dict(storage="float64", m=20, max_iters=2000, target_rrn=rrn)
+    r0 = gmres(A, b, **kw)
+    r1 = gmres(A, b, shard=1, **kw)
+    assert r0.iterations == r1.iterations
+    assert r0.restarts == r1.restarts
+    assert abs(r0.rrn - r1.rrn) <= 1e-10
+    np.testing.assert_allclose(np.asarray(r0.x), np.asarray(r1.x),
+                               rtol=1e-10, atol=1e-12)
+    assert r0.bytes_read == r1.bytes_read
+
+
+def test_shard1_batched_and_policy():
+    A, b, rrn = _problem()
+    B = jnp.stack([b, 2.0 * b])
+    kw = dict(policy="adaptive", m=10, max_iters=2000, target_rrn=rrn)
+    bat = gmres_batched(A, B, shard=1, **kw)
+    refs = [gmres(A, B[i], **kw) for i in range(2)]
+    for rb, rs in zip(bat, refs):
+        assert rb.converged and rs.converged
+        assert rb.iterations == rs.iterations
+        assert abs(rb.rrn - rs.rrn) <= 1e-10
+
+
+def test_dist_context_norms_and_wire_accounting():
+    """DistContext: unsharded norm is exactly jnp.linalg.norm; under
+    shard_map the psum-of-local-squares matches, and the optional
+    compressed transport stays within the frsz2_16 codec tolerance while
+    reduce_bytes shows it only pays above ~one 128-value block."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.collectives import reduce_bytes
+    from repro.dist.context import DistContext
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(64))
+    ref = float(jnp.linalg.norm(x))
+    local = DistContext()
+    assert float(local.norm(x)) == ref
+
+    mesh = jax.make_mesh((1,), ("ax",))
+    plain = DistContext(axis_name="ax")
+    comp = DistContext(axis_name="ax", compressed_norms=True)
+    f = jax.shard_map(lambda v: (plain.norm(v), comp.norm(v)), mesh=mesh,
+                      in_specs=(P("ax"),), out_specs=(P(), P()),
+                      axis_names={"ax"}, check_vma=False)
+    got_plain, got_comp = f(x)
+    assert abs(float(got_plain) - ref) < 1e-12
+    assert abs(float(got_comp) - ref) / ref < 2 ** -13
+
+    # scalar reductions never pay for compression; large payloads do
+    assert reduce_bytes(1, compressed=False) == 8
+    assert reduce_bytes(1, compressed=True) > 8
+    assert reduce_bytes(1024, compressed=True) < 1024 * 8
+
+
+def test_shard_validation_errors():
+    A, b, rrn = _problem(216)
+    with pytest.raises(ValueError, match="devices"):
+        gmres(A, b, shard=999, m=5, max_iters=5)
+    # 216 does not divide over 5 shards — >1 shard needs >1 device, so the
+    # divisibility check is exercised through the partitioner directly
+    from repro.sparse import partition_matvec
+
+    with pytest.raises(ValueError, match="divide"):
+        partition_matvec(A, 5)
+    with pytest.raises(ValueError, match="matvec"):
+        gmres(None, b, matvec=lambda v: v, shard=1, m=5, max_iters=5)
+    with pytest.raises(ValueError, match="device driver"):
+        gmres(A, b, shard=1, driver="host", m=5, max_iters=5)
+    with pytest.raises(ValueError, match="transport"):
+        gmres(A, b, shard=1, shard_transport="bogus", m=5, max_iters=5)
