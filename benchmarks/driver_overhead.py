@@ -90,9 +90,10 @@ def run(problem: str, n: int, formats: list[str], *, m: int, target_rrn,
               + (f"  [batch {batch}: {row['batch_warm_per_solve_s']:.3f}"
                  "s/solve]" if batch > 1 else ""))
     wins = [r for r in rows if r["speedup_warm"] > 1.0]
+    geomean = float(jnp.exp(jnp.mean(jnp.log(
+        jnp.asarray([r["speedup_warm"] for r in rows])))))
     print(f"\ndevice-resident wins {len(wins)}/{len(rows)} formats "
-          f"(geomean speedup "
-          f"{float(jnp.exp(jnp.mean(jnp.log(jnp.asarray([r['speedup_warm'] for r in rows]))))):.2f}x)")
+          f"(geomean speedup {geomean:.2f}x)")
     return rows
 
 

@@ -75,7 +75,7 @@ def run(verbose=True):
             print(f"\n{'arch':24s}{'shape':13s}{'dom':11s}"
                   f"{'t_cmp(ms)':>10s}{'t_mem(ms)':>10s}{'t_coll(ms)':>11s}"
                   f"{'step_frac':>10s}")
-            for r in sorted(probes, key=lambda r: (r['arch'], r['shape'])):
+            for r in sorted(probes, key=lambda r: (r["arch"], r["shape"])):
                 print(f"{r['arch']:24s}{r['shape']:13s}{r['dominant']:11s}"
                       f"{r['t_compute']*1e3:10.2f}"
                       f"{r.get('t_memory_floor', 0)*1e3:10.2f}"

@@ -4,19 +4,23 @@ The paper's premise is that CB-GMRES is bandwidth-bound; once the basis
 reads are compressed and the whole restart loop runs inside ``shard_map``,
 the surviving traffic is the *collectives*: the orthogonalization partial
 dots (one ``(m+1,)`` psum per inner iteration per sweep), the vector-norm
-scalar psums, and the matvec halo gather.  This harness runs the real
-sharded solve on emulated host devices under every transport and tabulates
-the modelled per-device wire bytes per cycle
-(:func:`repro.dist.collectives.reduce_bytes`), next to the measured
-iteration counts — the compressed-vs-plain-psum comparison the ROADMAP's
-"sharded GMRES end to end" item asks for.
+scalar psums, and the matvec's operand movement.  This harness runs the
+real sharded solve on emulated host devices under every transport and both
+row-partitioned matvec modes, and tabulates the modelled per-device wire
+bytes per cycle — every term priced by the accounting helpers in
+:mod:`repro.dist.collectives` (``reduce_bytes`` for psums,
+``gather_bytes`` for the all-gathered operand, ``halo_bytes`` for the
+neighbor exchange), so benchmark and solver cannot drift apart.
 
-What it shows (and the README documents): FRSZ2 on the wire pays on the
-*dots* reduction once the payload approaches one 128-value block (restart
-length m ≳ 128); the *norm* reductions are scalars, so compressing them
-always ships more bytes than a plain 8-byte psum; and the halo gather
-dwarfs both unless the operator is partitioned, which is the row-sharded
-matvec's job.
+What it shows (and the README documents): the **gathered matvec dominates
+everything** — a ring all-gather moves ``(P-1) * n/P`` values per device
+per matvec, while the neighbor halo exchange of a banded operator moves
+``2 * bandwidth`` (on the 27-point stencil at P=8 that is <25% of the
+total cycle wire, with *exact* f64 iteration parity against the unsharded
+driver).  FRSZ2 on the wire pays on the *dots* reduction once the payload
+approaches one 128-value block (restart length m ≳ 128); the *norm*
+reductions are scalars, so compressing them always ships more bytes than
+a plain 8-byte psum.
 
 Run directly (re-execs itself with emulated devices)::
 
@@ -31,18 +35,19 @@ import subprocess
 import sys
 
 TRANSPORTS = ("plain", "compressed", "compressed+norms")
+MATVEC_MODES = ("halo", "rows")
 
 
-def cycle_wire_bytes(m: int, j_stop: int, n_local: int, reorth: int, *,
-                     passes: int, dots_compressed: bool,
-                     norms_compressed: bool) -> dict:
+def cycle_wire_bytes(m: int, j_stop: int, reorth: int, *, passes: int,
+                     dots_compressed: bool, norms_compressed: bool,
+                     inner_mv_bytes: int, residual_mv_bytes: int) -> dict:
     """Modelled per-device wire bytes for one restart cycle.
 
     Per inner iteration: ``passes`` (+1 per fired reorth) dots psums of
-    ``m+1`` partials, and 2 (+1 on reorth) scalar norm psums (w_pre, hj1);
-    per cycle: 2 scalar psums (restart beta + explicit rrn) and
-    ``j_stop + 2`` halo gathers of the local chunk (one matvec per
-    iteration + the two residual recomputations).
+    ``m+1`` partials, 2 (+1 on reorth) scalar norm psums (w_pre, hj1), and
+    one operand movement (``inner_mv_bytes``); per cycle: 2 scalar psums
+    (restart beta + explicit rrn) and 2 residual-recomputation matvecs
+    (``residual_mv_bytes`` — always the exact transport).
     """
     from repro.dist.collectives import reduce_bytes
 
@@ -50,9 +55,9 @@ def cycle_wire_bytes(m: int, j_stop: int, n_local: int, reorth: int, *,
         m + 1, compressed=dots_compressed)
     norms = (j_stop * 2 + reorth + 2) * reduce_bytes(
         1, compressed=norms_compressed)
-    gather = (j_stop + 2) * n_local * 8
-    return dict(dots=dots, norms=norms, gather=gather,
-                total=dots + norms + gather)
+    matvec = j_stop * inner_mv_bytes + 2 * residual_mv_bytes
+    return dict(dots=dots, norms=norms, matvec=matvec,
+                total=dots + norms + matvec)
 
 
 def _inner(args) -> int:
@@ -63,49 +68,83 @@ def _inner(args) -> int:
     import jax.numpy as jnp
 
     from repro.core.accessor import format_by_name
+    from repro.dist.collectives import gather_bytes, halo_bytes
     from repro.solver import gmres
     from repro.solver.gmres import _cycle_row_reads
-    from repro.sparse import make_problem, rhs_for
+    from repro.sparse import halo_probe, make_problem, rhs_for
 
     p = args.shards
     n, m = args.n, args.m
     A, target = make_problem(args.problem, n)
     n = A.shape[0]
-    if n % p:
-        raise SystemExit(f"problem rounded n to {n}, not divisible by {p}")
     b, _ = rhs_for(A)
+    probe = halo_probe(A, p)
     # per-device bytes of one basis row: backs out the solve's actual
     # re-orthogonalization traffic from its bytes_read accounting
     row_bytes = format_by_name(args.storage,
-                               arith_dtype=jnp.float64).nbytes(1, n // p)
+                               arith_dtype=jnp.float64).nbytes(
+        1, probe.n_local)
 
-    print(f"{args.problem} n={n} m={m} shards={p} storage={args.storage}")
-    print(f"{'transport':18s} {'iters':>6s} {'cycles':>7s} "
-          f"{'dots/cyc':>10s} {'norms/cyc':>10s} {'halo/cyc':>10s} "
+    print(f"{args.problem} n={n} (pad {probe.n_pad}) m={m} shards={p} "
+          f"storage={args.storage} bandwidth={probe.bandwidth} "
+          f"strips={probe.strips}")
+
+    # -- f64 iteration parity: sharded halo vs the unsharded driver -------
+    kw = dict(m=m, max_iters=args.max_iters, target_rrn=target)
+    r_un = gmres(A, b, storage="float64", **kw)
+    r_halo = gmres(A, b, storage="float64", shard=p, shard_matvec="halo",
+                   **kw)
+    parity = (r_un.iterations == r_halo.iterations
+              and r_un.restarts == r_halo.restarts)
+    print(f"f64 parity (halo vs unsharded): iters {r_un.iterations} vs "
+          f"{r_halo.iterations}, restarts {r_un.restarts} vs "
+          f"{r_halo.restarts} -> {'EXACT' if parity else 'MISMATCH'}")
+
+    print(f"{'matvec':8s} {'transport':18s} {'iters':>6s} {'cycles':>7s} "
+          f"{'dots/cyc':>10s} {'norms/cyc':>10s} {'matvec/cyc':>11s} "
           f"{'total/cyc':>10s}  rrn")
     rows = []
-    for transport in TRANSPORTS:
-        res = gmres(A, b, storage=args.storage, m=m, max_iters=args.max_iters,
-                    target_rrn=target, shard=p, shard_transport=transport)
-        # one restart record per executed cycle (the +1 early-exit record
-        # only occurs for trivially-converged x0, guarded by the max)
-        cycles = max(res.restarts, 1)
-        j_avg = min(max(res.iterations // cycles, 1), m)
-        # rows swept beyond the nominal one-pass model = conditional MGS
-        # re-orth sweeps of ~j_avg+1 rows each (see _cycle_row_reads)
-        nominal_rows = cycles * _cycle_row_reads(j_avg, 1)
-        extra_rows = max(res.bytes_read / row_bytes - nominal_rows, 0.0)
-        reorth_per_cycle = int(round(extra_rows / (j_avg + 1) / cycles))
-        wire = cycle_wire_bytes(
-            m, j_avg, n // p, reorth_per_cycle, passes=1,
-            dots_compressed=transport != "plain",
-            norms_compressed=transport == "compressed+norms")
-        rows.append(dict(transport=transport, iters=res.iterations,
-                         cycles=cycles, rrn=res.rrn,
-                         converged=bool(res.converged), **wire))
-        print(f"{transport:18s} {res.iterations:6d} {cycles:7d} "
-              f"{wire['dots']:10d} {wire['norms']:10d} "
-              f"{wire['gather']:10d} {wire['total']:10d}  {res.rrn:.2e}")
+    totals = {}
+    for matvec_mode in args.matvec.split(","):
+        executed = (probe.mode if matvec_mode in ("auto", "halo")
+                    else matvec_mode)
+        for transport in TRANSPORTS:
+            res = gmres(A, b, storage=args.storage, shard=p,
+                        shard_transport=transport,
+                        shard_matvec=matvec_mode, **kw)
+            # one restart record per executed cycle (the +1 early-exit
+            # record only occurs for trivially-converged x0)
+            cycles = max(res.restarts, 1)
+            j_avg = min(max(res.iterations // cycles, 1), m)
+            # rows swept beyond the nominal one-pass model = conditional
+            # MGS re-orth sweeps of ~j_avg+1 rows each (_cycle_row_reads)
+            nominal_rows = cycles * _cycle_row_reads(j_avg, 1)
+            extra_rows = max(res.bytes_read / row_bytes - nominal_rows, 0.0)
+            reorth_per_cycle = int(round(extra_rows / (j_avg + 1) / cycles))
+            compressed = transport != "plain"
+            if executed == "halo":
+                inner_mv = halo_bytes(probe.strips, compressed=compressed)
+                residual_mv = halo_bytes(probe.strips)
+            else:
+                inner_mv = residual_mv = gather_bytes(probe.n_local, p)
+            wire = cycle_wire_bytes(
+                m, j_avg, reorth_per_cycle, passes=1,
+                dots_compressed=compressed,
+                norms_compressed=transport == "compressed+norms",
+                inner_mv_bytes=inner_mv, residual_mv_bytes=residual_mv)
+            rows.append(dict(mode=executed, transport=transport,
+                             iters=res.iterations, cycles=cycles,
+                             rrn=res.rrn, converged=bool(res.converged),
+                             parity=parity, **wire))
+            totals[(executed, transport)] = wire["total"]
+            print(f"{executed:8s} {transport:18s} {res.iterations:6d} "
+                  f"{cycles:7d} {wire['dots']:10d} {wire['norms']:10d} "
+                  f"{wire['matvec']:11d} {wire['total']:10d}  "
+                  f"{res.rrn:.2e}")
+    if ("halo", "plain") in totals and ("rows", "plain") in totals:
+        ratio = totals[("halo", "plain")] / totals[("rows", "plain")]
+        print(f"\nhalo-mode wire bytes per cycle = {100 * ratio:.1f}% of "
+              f"gathered mode (plain transport)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)
@@ -116,8 +155,8 @@ def _inner(args) -> int:
 
 
 def run(n: int = 2048, m: int = 30, shards: int = 8, max_iters: int = 4000,
-        problem: str = "synth:atmosmod", storage: str = "frsz2_32",
-        json_path: str | None = None):
+        problem: str = "synth:stencil27", storage: str = "frsz2_32",
+        matvec: str = ",".join(MATVEC_MODES), json_path: str | None = None):
     """Spawn the measurement in a subprocess with emulated devices
     (the parent's jax is typically already initialized single-device)."""
     env = dict(os.environ)
@@ -127,13 +166,13 @@ def run(n: int = 2048, m: int = 30, shards: int = 8, max_iters: int = 4000,
     cmd = [sys.executable, "-m", "benchmarks.shard_wire", "--inner",
            "--n", str(n), "--m", str(m), "--shards", str(shards),
            "--max-iters", str(max_iters), "--problem", problem,
-           "--storage", storage]
+           "--storage", storage, "--matvec", matvec]
     if json_path:
         cmd += ["--json", json_path]
     out = subprocess.run(
         cmd,
         env=env, cwd=os.path.join(os.path.dirname(__file__), ".."),
-        capture_output=True, text=True, timeout=1200)
+        capture_output=True, text=True, timeout=1800)
     sys.stdout.write(out.stdout)
     if out.returncode:
         sys.stderr.write(out.stderr[-2000:])
@@ -149,15 +188,18 @@ def main(argv=None):
     ap.add_argument("--m", type=int, default=30)
     ap.add_argument("--shards", type=int, default=8)
     ap.add_argument("--max-iters", type=int, default=4000)
-    ap.add_argument("--problem", default="synth:atmosmod")
+    ap.add_argument("--problem", default="synth:stencil27")
     ap.add_argument("--storage", default="frsz2_32")
+    ap.add_argument("--matvec", default=",".join(MATVEC_MODES),
+                    help="comma list of matvec modes to measure "
+                         "(halo,rows,replicated,auto)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
     if args.inner:
         return _inner(args)
     run(n=512 if args.quick else args.n, m=args.m, shards=args.shards,
         max_iters=args.max_iters, problem=args.problem,
-        storage=args.storage, json_path=args.json)
+        storage=args.storage, matvec=args.matvec, json_path=args.json)
     return 0
 
 

@@ -32,7 +32,7 @@ ARCHS = {
         d_ff=24576, vocab_size=49152, rope_theta=1e4,
         microbatch=16,                            # v5e HBM fit (EXPERIMENTS)
     ),
-    "mistral-nemo-12b": ArchConfig(               # [hf:mistralai/Mistral-Nemo-Base-2407]
+    "mistral-nemo-12b": ArchConfig(      # [hf:mistralai/Mistral-Nemo-Base-2407]
         name="mistral-nemo-12b", family="dense",
         num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8,
         d_ff=14336, vocab_size=131072, head_dim=128, rope_theta=1e6,
@@ -52,7 +52,7 @@ ARCHS = {
         num_experts=8, top_k=2, window=4096, rope_theta=1e6,
         microbatch=16,                            # HBM fit; see EXPERIMENTS
     ),
-    "llama4-scout-17b-a16e": ArchConfig(          # [hf:meta-llama/Llama-4-Scout-17B-16E]
+    "llama4-scout-17b-a16e": ArchConfig(  # [hf:meta-llama/Llama-4-Scout-17B-16E]
         name="llama4-scout-17b-a16e", family="moe",
         num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
         d_ff=8192, vocab_size=202048,

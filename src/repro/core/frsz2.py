@@ -50,10 +50,14 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 _IEEE = {
-    jnp.dtype("float32"): dict(uint=jnp.uint32, mant=23, expbits=8, bias=127, width=32),
-    jnp.dtype("float64"): dict(uint=jnp.uint64, mant=52, expbits=11, bias=1023, width=64),
-    jnp.dtype("bfloat16"): dict(uint=jnp.uint16, mant=7, expbits=8, bias=127, width=16),
-    jnp.dtype("float16"): dict(uint=jnp.uint16, mant=10, expbits=5, bias=15, width=16),
+    jnp.dtype("float32"): dict(
+        uint=jnp.uint32, mant=23, expbits=8, bias=127, width=32),
+    jnp.dtype("float64"): dict(
+        uint=jnp.uint64, mant=52, expbits=11, bias=1023, width=64),
+    jnp.dtype("bfloat16"): dict(
+        uint=jnp.uint16, mant=7, expbits=8, bias=127, width=16),
+    jnp.dtype("float16"): dict(
+        uint=jnp.uint16, mant=10, expbits=5, bias=15, width=16),
 }
 
 
@@ -237,9 +241,13 @@ def _encode_block(sign, e, sig, emax, spec: FrszSpec):
     rs = jnp.clip(shift, 0, width - 1)
     ls = jnp.clip(-shift, 0, width - 1)
     big = shift >= width
-    if spec.rounding == "nearest" :
+    if spec.rounding == "nearest":
         # round-half-up prior to the cut; clamp on overflow of the field
-        half = jnp.where(rs > 0, jnp.asarray(1, ucode) << jnp.maximum(rs - 1, 0).astype(ucode), jnp.asarray(0, ucode))
+        half = jnp.where(
+            rs > 0,
+            jnp.asarray(1, ucode) << jnp.maximum(rs - 1, 0).astype(ucode),
+            jnp.asarray(0, ucode),
+        )
         sig_r = sig + jnp.where(shift > 0, half, jnp.zeros_like(half))
     else:
         sig_r = sig
@@ -302,7 +310,8 @@ def _decode_block(c: jax.Array, emax: jax.Array, spec: FrszSpec) -> jax.Array:
     e = emax[..., None].astype(jnp.int32) - k
     # step 3: drop the leading 1; nf = l-2-k fraction bits remain
     nf = l - 2 - k
-    frac = csig ^ jnp.where(zero, jnp.zeros_like(csig), one << jnp.maximum(nf, 0).astype(ucode))
+    frac = csig ^ jnp.where(
+        zero, jnp.zeros_like(csig), one << jnp.maximum(nf, 0).astype(ucode))
     d = mant - nf  # left shift if positive, right if negative
     width = ieee["width"]
     m = jnp.where(

@@ -11,7 +11,9 @@ Three small modules:
                  (EP vs TP arbitration, GQA head divisibility), batch-axis
                  selection, and NamedSharding trees for params/caches.
   collectives  — FRSZ2-compressed cross-pod gradient all-reduce
-                 (``compressed_pmean``) + wire-byte accounting.
+                 (``compressed_pmean``), the neighbor halo exchange for
+                 banded SpMV (``halo_exchange``), and wire-byte accounting
+                 (``reduce_bytes`` / ``halo_bytes`` / ``gather_bytes``).
   context      — :class:`~repro.dist.context.DistContext`: the solver's
                  norm/reduction hook (local vs psum-over-axis), threaded
                  through the GMRES cycle so the whole device-resident
@@ -23,7 +25,15 @@ with ``axis_names=…, check_vma=…``).
 """
 from repro.dist import act_sharding, collectives, context, sharding
 from repro.dist.act_sharding import constrain
-from repro.dist.collectives import compressed_pmean, pmean_bytes, reduce_bytes
+from repro.dist.collectives import (
+    compressed_pmean,
+    gather_bytes,
+    halo_bytes,
+    halo_exchange,
+    halo_wire_spec,
+    pmean_bytes,
+    reduce_bytes,
+)
 from repro.dist.context import DistContext
 from repro.dist.sharding import (
     batch_axes,
@@ -41,6 +51,10 @@ __all__ = [
     "sharding",
     "constrain",
     "compressed_pmean",
+    "gather_bytes",
+    "halo_bytes",
+    "halo_exchange",
+    "halo_wire_spec",
     "pmean_bytes",
     "reduce_bytes",
     "DistContext",

@@ -25,11 +25,33 @@ import numpy as np
 
 from repro.core import frsz2 as F
 
-__all__ = ["WIRE_SPEC", "compressed_pmean", "compressed_psum", "pmean_bytes",
-           "reduce_bytes"]
+__all__ = [
+    "WIRE_SPEC",
+    "compressed_pmean",
+    "compressed_psum",
+    "gather_bytes",
+    "halo_bytes",
+    "halo_exchange",
+    "halo_wire_spec",
+    "pmean_bytes",
+    "reduce_bytes",
+]
 
 #: wire codec: frsz2_16 over 128-value blocks (2 B codes + 4 B/128 exps)
 WIRE_SPEC = F.FrszSpec(bs=128, l=16, dtype=jnp.float32)
+
+
+def halo_wire_spec(dtype) -> F.FrszSpec:
+    """Wire codec for halo strips: frsz2 at *half* the operand width.
+
+    Halo values feed the operator (they are multiplied by matrix entries),
+    so they ride a higher-fidelity codec than the dots' partial-sum stream:
+    frsz2_32 for f64 operands (the paper's flagship format — ~2^-30 of the
+    block max, half the f64 wire bytes), frsz2_16 for f32.
+    """
+    if jnp.dtype(dtype) == jnp.dtype("float64"):
+        return F.FrszSpec(bs=128, l=32, dtype=jnp.float64)
+    return WIRE_SPEC
 
 
 # -- jax.shard_map forward-compat shim --------------------------------------
@@ -93,6 +115,90 @@ def compressed_psum(tree, axis_name: str):
     return jax.tree.map(leaf_psum, tree)
 
 
+# ---------------------------------------------------------------------------
+# Neighbor halo exchange (banded SpMV: boundary strips instead of all_gather)
+# ---------------------------------------------------------------------------
+
+
+def _pshift(x, k: int, n_shards: int, axis_name: str, compressed: bool):
+    """Receive the neighbor-at-distance-``k``'s copy of ``x`` (0 < |k| <
+    n_shards): device ``p`` gets device ``p - k``'s value, edges get zeros.
+
+    ``ppermute`` fills unaddressed destinations with zeros, which is exactly
+    the open (non-periodic) boundary a banded operator needs — no column of
+    a real matrix row reaches outside [0, n).  With ``compressed`` the strip
+    travels as FRSZ2 codes (:func:`halo_wire_spec`): zero codes decompress
+    to exact zeros, so the edge semantics survive compression.
+    """
+    perm = [(i, i + k) for i in range(n_shards) if 0 <= i + k < n_shards]
+    if not compressed:
+        return jax.lax.ppermute(x, axis_name, perm)
+    spec = halo_wire_spec(x.dtype)
+    bc = F.compress(x, spec)
+    codes = jax.lax.ppermute(bc.codes, axis_name, perm)
+    exps = jax.lax.ppermute(bc.exps, axis_name, perm)
+    moved = F.BlockCompressed(codes=codes, exps=exps, n=bc.n, spec=spec)
+    return F.decompress(moved).astype(x.dtype)
+
+
+def halo_exchange(x_local, strips, n_shards: int, axis_name: str, *,
+                  compressed: bool = False):
+    """Extend this device's chunk with neighbor boundary strips.
+
+    ``x_local`` is the ``(n_local,)`` chunk of a row-partitioned vector;
+    ``strips`` the per-hop strip lengths from the halo probe (hop 1 first;
+    every strip but the last is a full chunk).  Returns the ``(n_local +
+    2 * halo,)`` extended vector ``[left halo | x_local | right halo]``
+    with ``halo = sum(strips)`` — the operand a banded local SpMV contracts
+    against.  Only ``2 * halo`` values cross the wire per device instead of
+    the ``(n_shards - 1) * n_local`` a tiled ``all_gather`` moves
+    (:func:`halo_bytes` vs :func:`gather_bytes`).
+
+    Runs inside ``shard_map`` with ``axis_name`` bound.  ``compressed``
+    ships the strips as FRSZ2 codes (:func:`halo_wire_spec` — half the
+    operand width).
+    """
+    n_local = x_local.shape[0]
+    left, right = [], []
+    for k, s in enumerate(strips, start=1):
+        if not 0 < s <= n_local:
+            raise ValueError(f"strip {k} of {strips} not in (0, {n_local}]")
+        # left halo: the trailing s values of the k-hop left neighbor
+        left.append(_pshift(x_local[n_local - s:], +k, n_shards, axis_name,
+                            compressed))
+        # right halo: the leading s values of the k-hop right neighbor
+        right.append(_pshift(x_local[:s], -k, n_shards, axis_name,
+                             compressed))
+    # farthest-first on the left, nearest-first on the right: global order
+    return jnp.concatenate(left[::-1] + [x_local] + right)
+
+
+def halo_bytes(strips, *, compressed: bool = False, plain_itemsize: int = 8,
+               dtype=jnp.float64) -> int:
+    """Per-device wire payload of one :func:`halo_exchange`.
+
+    Each strip is both sent and received on each side, so a device moves
+    ``2 * sum(strips)`` values; compressed strips ride
+    :func:`halo_wire_spec` for ``dtype`` and pay FRSZ2's whole-block
+    granularity per strip (a 1-value strip still ships a 128-code block).
+    """
+    if compressed:
+        spec = halo_wire_spec(dtype)
+        return 2 * sum(F.storage_nbytes(int(s), spec) for s in strips)
+    return 2 * int(sum(strips)) * plain_itemsize
+
+
+def gather_bytes(n_local: int, n_shards: int, *,
+                 plain_itemsize: int = 8) -> int:
+    """Per-device wire payload of one tiled ``all_gather``.
+
+    A ring all-gather forwards every other device's chunk through each
+    link: each device transmits (and receives) ``n_shards - 1`` chunks, not
+    just its own — the quantity the halo exchange is competing against.
+    """
+    return (n_shards - 1) * n_local * plain_itemsize
+
+
 def reduce_bytes(n_values: int, *, compressed: bool,
                  plain_itemsize: int = 8) -> int:
     """Per-device wire payload for one psum of ``n_values`` values.
@@ -111,12 +217,18 @@ def reduce_bytes(n_values: int, *, compressed: bool,
 
 
 def pmean_bytes(tree, *, compressed: bool) -> int:
-    """Wire bytes per device for one pmean of ``tree`` (f32 baseline)."""
+    """Wire bytes per device for one pmean of ``tree``.
+
+    The plain path ships each leaf at its own itemsize (an f64 gradient
+    leaf costs 8 B/value, not the f32 4 B this helper once assumed); the
+    compressed path is the actual code + exponent stream of ``WIRE_SPEC``
+    (independent of the leaf dtype — the codec casts to its wire dtype).
+    """
     total = 0
     for leaf in jax.tree.leaves(tree):
         n = int(np.prod(leaf.shape)) if leaf.ndim else 1
         if compressed:
             total += F.storage_nbytes(n, WIRE_SPEC)
         else:
-            total += n * 4
+            total += n * jnp.dtype(leaf.dtype).itemsize
     return total

@@ -172,7 +172,9 @@ def matvec(bc: F.BlockCompressed, x: jax.Array, *, bn: int = 2048,
     if interpret is None:
         interpret = _default_interpret()
     codes, exps, n_pad = _basis_2d(bc)
-    xp = jnp.pad(x.astype(spec.dtype), (0, n_pad - bc.n)) if n_pad != bc.n else x.astype(spec.dtype)
+    xp = x.astype(spec.dtype)
+    if n_pad != bc.n:
+        xp = jnp.pad(xp, (0, n_pad - bc.n))
     bn_eff = _tile_n(n_pad, bn, spec.bs)
     if n_pad % bn_eff or bn_eff % LANES:
         V = F.decompress(bc)

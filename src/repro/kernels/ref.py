@@ -23,7 +23,8 @@ def compress_ref(x: jax.Array, spec: F.FrszSpec):
     return bc.codes, bc.exps
 
 
-def decompress_ref(codes: jax.Array, exps: jax.Array, spec: F.FrszSpec, n: int | None = None):
+def decompress_ref(codes: jax.Array, exps: jax.Array, spec: F.FrszSpec,
+                   n: int | None = None):
     nb, bs = codes.shape[-2], codes.shape[-1]
     if n is None:
         n = nb * bs

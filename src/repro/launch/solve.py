@@ -24,9 +24,11 @@ Pipeline flags (see ``repro.solver.pipeline``):
 
 ``--shard P`` runs every solve's restart loop inside ``jax.shard_map``
 over ``P`` devices (vector dim row-partitioned; ``--shard-transport``
-picks plain vs FRSZ2-compressed collectives) — composes with ``--batch``
-for multi-device multi-RHS serving.  See the README's multi-device
-section.
+picks plain vs FRSZ2-compressed collectives; ``--shard-matvec`` picks the
+row-partitioned SpMV — ``auto`` probes the operator bandwidth and uses the
+neighbor halo exchange for banded operators, the gathered operand
+otherwise) — composes with ``--batch`` for multi-device multi-RHS
+serving.  See the README's multi-device section.
 """
 from __future__ import annotations
 
@@ -57,7 +59,8 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                 driver: str = "device", batch: int = 1,
                 precond: str | None = None, ortho: str = "mgs",
                 policy: str | None = None, shard: int | None = None,
-                shard_transport: str = "plain", verbose: bool = True):
+                shard_transport: str = "plain", shard_matvec: str = "auto",
+                verbose: bool = True):
     jax.config.update("jax_enable_x64", True)
     A, rrn = make_problem(problem, n)
     if target_rrn is not None:
@@ -71,7 +74,8 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
         kw = dict(storage=run["storage"], policy=run["policy"],
                   precond=precond, ortho=ortho, m=m, max_iters=max_iters,
                   target_rrn=rrn, shard=shard,
-                  shard_transport=shard_transport)
+                  shard_transport=shard_transport,
+                  shard_matvec=shard_matvec)
         t0 = time.time()
         if batch > 1:
             B = _batch_rhs(A, b, batch)
@@ -93,6 +97,7 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                          batch=batch, precond=precond or "identity",
                          ortho=ortho, shard=shard or 1,
                          shard_transport=shard_transport if shard else None,
+                         shard_matvec=shard_matvec if shard else None,
                          iters=iters, rrn=res.rrn,
                          converged=conv, x_err=err,
                          restarts=res.restarts, wall_s=wall,
@@ -134,6 +139,11 @@ def main(argv=None):
     ap.add_argument("--shard-transport", default="plain",
                     choices=["plain", "compressed", "compressed+norms"],
                     help="wire format for the sharded solve's collectives")
+    ap.add_argument("--shard-matvec", default="auto",
+                    choices=["auto", "halo", "rows", "replicated"],
+                    help="row-partitioned SpMV: auto probes the operator "
+                         "bandwidth (neighbor halo exchange for banded "
+                         "operators, gathered operand otherwise)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
     rows = solve_suite(args.problem, args.n, args.formats.split(","),
@@ -141,7 +151,8 @@ def main(argv=None):
                        driver=args.driver, batch=args.batch,
                        precond=args.precond, ortho=args.ortho,
                        policy=args.policy, shard=args.shard,
-                       shard_transport=args.shard_transport)
+                       shard_transport=args.shard_transport,
+                       shard_matvec=args.shard_matvec)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)

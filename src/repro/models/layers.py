@@ -48,7 +48,8 @@ def scan_or_unroll(body, carry, xs, *, unroll: bool = False):
 
 def rms_norm(x, scale, eps=1e-6):
     var = jnp.mean(jnp.square(x.astype(f32)), axis=-1, keepdims=True)
-    return (x.astype(f32) * jax.lax.rsqrt(var + eps) * scale.astype(f32)).astype(x.dtype)
+    return (x.astype(f32) * jax.lax.rsqrt(var + eps)
+            * scale.astype(f32)).astype(x.dtype)
 
 
 def rope_freqs(hd: int, theta: float):

@@ -361,7 +361,7 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
 
 def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
                      eta: float, target_rrn: float, ortho, precond,
-                     dist=LOCAL):
+                     dist=LOCAL, residual_matvec=None):
     """Build the pure (b, x0) -> state solve function (jit/vmap-able).
 
     Semantics replicate ``_gmres_host`` decision-for-decision so the two
@@ -378,7 +378,15 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
     be a local matvec (see ``repro.sparse.shard.partition_matvec``), and
     every norm reduces over the mesh axis — the whole restart loop then
     runs inside ``shard_map`` (see ``repro.solver.sharded``).
+
+    ``residual_matvec`` (default: ``matvec``) is the operator used for the
+    explicit residual recomputations that gate restarts and convergence.
+    The split mirrors CB-GMRES's central trick: the *cycle-internal*
+    matvec may be lossy (a compressed halo transport perturbs Arnoldi like
+    inexact Krylov — tolerable), but the residual check must apply the
+    exact operator or its error becomes the convergence floor.
     """
+    rmv = matvec if residual_matvec is None else residual_matvec
     ad = accs[0].arith_dtype
     n_levels = len(accs)
     row_bytes = [acc.nbytes() / acc.m for acc in accs]
@@ -388,7 +396,7 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
     def solve(b, x0):
         b = b.astype(ad)
         b_norm = dist.norm(b)
-        rrn0 = dist.norm(b - matvec(x0).astype(ad)) / b_norm
+        rrn0 = dist.norm(b - rmv(x0).astype(ad)) / b_norm
 
         init = dict(
             x=x0,
@@ -409,7 +417,7 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
             return (s["total"] < max_iters) & ~s["converged"] & ~s["stagnated"]
 
         def body(s):
-            r = b - matvec(s["x"]).astype(ad)
+            r = b - rmv(s["x"]).astype(ad)
             beta = dist.norm(r)
             rr = beta / b_norm
             rst = s["rst"].at[s["restarts"]].set(rr, mode="drop")
@@ -435,7 +443,7 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
                     hist = s["hist"].at[idx].set(est, mode="drop")
                     total = s["total"] + j_stop
                     cycles = s["cycles"] + 1
-                    rrn = dist.norm(b - matvec(x).astype(ad)) / b_norm
+                    rrn = dist.norm(b - rmv(x).astype(ad)) / b_norm
                     conv = rrn <= target_rrn
                     last = est[jnp.maximum(j_stop - 1, 0)]
                     # stagnation guard (host: np.allclose(last, prev, 1e-2))
@@ -586,6 +594,7 @@ def gmres(
     driver: str = "device",
     shard: int | None = None,
     shard_transport: str = "plain",
+    shard_matvec: str = "auto",
 ) -> GmresResult:
     """Solve A x = b with restarted (CB-)GMRES.
 
@@ -621,6 +630,10 @@ def gmres(
     products travel as FRSZ2 codes), or ``"compressed+norms"`` (norm
     reductions compressed too — more wire bytes for a scalar, measured by
     ``benchmarks/shard_wire.py``; exists for apples-to-apples accounting).
+    ``shard_matvec`` picks the row-partitioned SpMV: ``"auto"`` (probe the
+    operator's bandwidth — neighbor halo exchange for banded operators,
+    gathered operand otherwise), ``"halo"``, ``"rows"``, or
+    ``"replicated"`` (see :func:`repro.sparse.shard.partition_matvec`).
     """
     user_matvec = matvec
     if shard is not None:
@@ -632,7 +645,7 @@ def gmres(
             A, b, x0=x0, storage=storage, policy=policy, precond=precond,
             ortho=ortho, m=m, max_iters=max_iters, target_rrn=target_rrn,
             arith_dtype=arith_dtype, eta=eta, matvec=matvec, shard=shard,
-            transport=shard_transport)
+            transport=shard_transport, partition_mode=shard_matvec)
     accs, policy, arith_dtype, matvec, precond, ortho = _resolve(
         A, b, storage, policy, m, arith_dtype, matvec, precond, ortho)
     b = b.astype(arith_dtype)
@@ -667,6 +680,7 @@ def gmres_batched(
     matvec: Callable | None = None,
     shard: int | None = None,
     shard_transport: str = "plain",
+    shard_matvec: str = "auto",
 ) -> list[GmresResult]:
     """Solve A X[i] = B[i] for a batch of right-hand sides ``B (k, n)``.
 
@@ -690,7 +704,8 @@ def gmres_batched(
             A, B, batched=True, x0=X0, storage=storage, policy=policy,
             precond=precond, ortho=ortho, m=m, max_iters=max_iters,
             target_rrn=target_rrn, arith_dtype=arith_dtype, eta=eta,
-            matvec=matvec, shard=shard, transport=shard_transport)
+            matvec=matvec, shard=shard, transport=shard_transport,
+            partition_mode=shard_matvec)
     user_matvec = matvec
     accs, policy, arith_dtype, matvec, precond, ortho = _resolve(
         A, B[0], storage, policy, m, arith_dtype, matvec, precond, ortho)

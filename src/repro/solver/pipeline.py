@@ -176,7 +176,8 @@ class Preconditioner:
     def spec(self):  # pragma: no cover - overridden
         raise NotImplementedError
 
-    def shard_local(self, axis_name: str, n_local: int) -> "Preconditioner":
+    def shard_local(self, axis_name: str, n_local: int,
+                    n_pad: int | None = None) -> "Preconditioner":
         """Equivalent preconditioner over the device-local vector chunk.
 
         Called once by the sharded driver before it wraps the solve in
@@ -184,6 +185,9 @@ class Preconditioner:
         the row-partitioned vectors.  Formats that hold full-length state
         (Jacobi's diagonal) return a view that slices by
         ``jax.lax.axis_index``; elementwise-stateless ones return ``self``.
+        ``n_pad`` is the zero-padded vector length when the problem dim
+        does not divide the mesh (state vectors must be identity-extended
+        so padded chunk entries stay exact zeros).
         """
         raise NotImplementedError(
             f"{type(self).__name__} does not support sharded application; "
@@ -199,7 +203,7 @@ class IdentityPreconditioner(Preconditioner):
     def spec(self):
         return ("identity",)
 
-    def shard_local(self, axis_name, n_local):
+    def shard_local(self, axis_name, n_local, n_pad=None):
         return self
 
 
@@ -229,9 +233,16 @@ class JacobiPreconditioner(Preconditioner):
     def spec(self):
         return ("jacobi", self._digest)
 
-    def shard_local(self, axis_name, n_local):
+    def shard_local(self, axis_name, n_local, n_pad=None):
+        inv_diag = self.inv_diag
+        if n_pad is not None and n_pad > inv_diag.shape[0]:
+            # identity-extend: padded vector entries are exact zeros, and
+            # 1.0 * 0 keeps them so (a zero pad would make them 0/0 NaNs)
+            inv_diag = jnp.pad(inv_diag,
+                               (0, n_pad - inv_diag.shape[0]),
+                               constant_values=1.0)
         return _LocalJacobiPreconditioner(
-            self.inv_diag, axis_name, n_local, self._digest)
+            inv_diag, axis_name, n_local, self._digest)
 
 
 class _LocalJacobiPreconditioner(Preconditioner):
@@ -257,7 +268,7 @@ class _LocalJacobiPreconditioner(Preconditioner):
     def spec(self):
         return ("jacobi-local", self._digest, self.axis_name, self.n_local)
 
-    def shard_local(self, axis_name, n_local):
+    def shard_local(self, axis_name, n_local, n_pad=None):
         if axis_name != self.axis_name or n_local != self.n_local:
             raise ValueError("preconditioner already sharded differently")
         return self
@@ -280,7 +291,7 @@ class CallablePreconditioner(Preconditioner):
     def spec(self):
         return ("callable", self.name if self.name is not None else id(self.fn))
 
-    def shard_local(self, axis_name, n_local):
+    def shard_local(self, axis_name, n_local, n_pad=None):
         # The hook will see (n_local,) chunks of row-partitioned vectors.
         # Elementwise hooks are automatically correct only when their state
         # is chunk-shaped; anything holding full-length arrays must be

@@ -12,8 +12,13 @@ basis rows, the residual) is row-partitioned along the vector dim over a
     :func:`repro.dist.collectives.compressed_psum`);
   * vector norms become psum-of-local-squares through the
     :class:`~repro.dist.context.DistContext` threaded into the cycle;
-  * the matvec is row-partitioned (gathered-halo ELL rows or a replicated
-    operand, :func:`repro.sparse.shard.partition_matvec`);
+  * the matvec is row-partitioned (neighbor halo exchange for banded
+    operators, gathered operand or a replicated fallback otherwise —
+    auto-selected by :func:`repro.sparse.shard.partition_matvec`'s probe,
+    forced with ``partition_mode=``);
+  * vector dims that do not divide the mesh are zero-padded to the next
+    multiple (padded operator rows are masked, so the padded solve embeds
+    the original exactly); the returned ``x`` is trimmed back;
   * the while_loop state's partition specs come from
     :func:`repro.dist.sharding.driver_partition_specs` — ``x`` and the
     stores sharded, history buffers and scalars replicated.
@@ -122,10 +127,11 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
 
     b = jnp.asarray(b)
     n = b.shape[-1]
-    if n % p_dev:
-        raise ValueError(f"vector dim {n} does not divide over "
-                         f"{p_dev} devices")
-    n_local = n // p_dev
+    # vector dims that do not divide the mesh shard zero-padded: padded
+    # operator rows are masked (val 0), so every padded vector entry stays
+    # an exact zero through the whole solve and x trims back losslessly
+    n_pad = -(-n // p_dev) * p_dev
+    n_local = n_pad // p_dev
     if arith_dtype is None:
         arith_dtype = b.dtype
 
@@ -137,14 +143,15 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
         for f in policy.formats()
     )
     precond_obj = resolve_preconditioner(precond, A).shard_local(
-        axis_name, n_local)
+        axis_name, n_local, n_pad)
     ortho_obj = orthogonalizer_by_name(ortho)
     dist = DistContext(axis_name=axis_name,
                        compressed_norms=transport == "compressed+norms")
 
     solve, operand = _cached_sharded_solve(
         A, batched, accs, policy, m, max_iters, eta, target_rrn, ortho_obj,
-        precond_obj, dist, p_dev, axis_name, partition_mode)
+        precond_obj, dist, p_dev, axis_name, partition_mode,
+        compressed_dots)
 
     b = b.astype(arith_dtype)
     if x0 is None:
@@ -153,8 +160,14 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
         x0 = jnp.asarray(x0).astype(arith_dtype)
         if x0.shape != b.shape:
             raise ValueError(f"x0 shape {x0.shape} != b shape {b.shape}")
+    if n_pad != n:
+        widths = [(0, 0)] * (b.ndim - 1) + [(0, n_pad - n)]
+        b = jnp.pad(b, widths)
+        x0 = jnp.pad(x0, widths)
 
     states = solve(operand, b, x0)
+    if n_pad != n:
+        states = dict(states, x=states["x"][..., :n])
     if not batched:
         return _device_result(states)
     return [
@@ -165,15 +178,23 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
 
 def _build_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
                          target_rrn, ortho, precond, dist, p_dev, axis_name,
-                         partition_mode):
-    operand, op_specs, local_mv = partition_matvec(
-        A, p_dev, axis_name, mode=partition_mode)
+                         partition_mode, compressed_halo):
     mesh = Mesh(np.asarray(jax.devices()[:p_dev]), (axis_name,))
+    operand, op_specs, local_mv = partition_matvec(
+        A, p_dev, axis_name, mode=partition_mode, mesh=mesh,
+        compressed_halo=compressed_halo)
+    # the lossy (compressed-halo) transport serves only the cycle-internal
+    # matvecs; the explicit residual recomputations always ride an exact
+    # exchange, else the codec error floors the attainable rrn (same split
+    # as lossy basis storage vs exact arithmetic in CB-GMRES itself)
+    local_rmv = local_mv.exact
 
     def solve_local(op, b_loc, x0_loc):
         mv = lambda v: local_mv(op, v)  # noqa: E731
+        rmv = lambda v: local_rmv(op, v)  # noqa: E731
         fn = _device_solve_fn(mv, accs, policy, m, max_iters, eta,
-                              target_rrn, ortho, precond, dist)
+                              target_rrn, ortho, precond, dist,
+                              residual_matvec=rmv)
         return fn(b_loc, x0_loc)
 
     if batched:
@@ -194,7 +215,7 @@ def _build_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
 
 def _cached_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
                           target_rrn, ortho, precond, dist, p_dev, axis_name,
-                          partition_mode):
+                          partition_mode, compressed_halo):
     pins: tuple = ()
 
     def make_key():
@@ -205,12 +226,13 @@ def _cached_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
                 dist.spec(), accs[0].m, accs[0].n,
                 jnp.dtype(accs[0].arith_dtype).name, m, max_iters,
                 float(eta), float(target_rrn), p_dev, axis_name,
-                partition_mode)
+                partition_mode, compressed_halo)
 
     def build():
         solve, operand = _build_sharded_solve(
             A, batched, accs, policy, m, max_iters, eta, target_rrn, ortho,
-            precond, dist, p_dev, axis_name, partition_mode)
+            precond, dist, p_dev, axis_name, partition_mode,
+            compressed_halo)
         return solve, operand, pins
 
     ent = _lru_cached(_SHARDED_CACHE, _SHARDED_CACHE_SIZE, make_key, build)

@@ -2,4 +2,4 @@
 problem suite."""
 from repro.sparse.csr import CSR, ELL, csr_from_coo
 from repro.sparse.problems import PROBLEMS, make_problem, problem_suite, rhs_for
-from repro.sparse.shard import partition_matvec
+from repro.sparse.shard import HaloProbe, halo_probe, partition_matvec

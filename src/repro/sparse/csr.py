@@ -80,6 +80,21 @@ class CSR:
             fp = self._fingerprint = h.hexdigest()
         return fp
 
+    def bandwidth(self) -> int:
+        """max |col - row| over nonzero entries (host-side, cached).
+
+        Explicitly-stored zeros are excluded: they contribute nothing to a
+        matvec, so the halo partitioner may ignore their columns.
+        """
+        bw = getattr(self, "_bandwidth", None)
+        if bw is None:
+            indptr = np.asarray(self.indptr)
+            rows = np.repeat(np.arange(self.shape[0]), np.diff(indptr))
+            live = np.asarray(self.data) != 0
+            off = np.abs(np.asarray(self.indices)[live] - rows[live])
+            bw = self._bandwidth = int(off.max()) if off.size else 0
+        return bw
+
     def __matmul__(self, x):
         return self.matvec(x)
 
@@ -142,6 +157,20 @@ class ELL:
                 h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
             fp = self._fingerprint = h.hexdigest()
         return fp
+
+    def bandwidth(self) -> int:
+        """max |col - row| over nonzero entries (host-side, cached).
+
+        Padding slots carry val 0 / col 0, so masking on the values also
+        keeps a high row's padding from faking an (n-ish) bandwidth.
+        """
+        bw = getattr(self, "_bandwidth", None)
+        if bw is None:
+            live = np.asarray(self.vals) != 0
+            rows = np.arange(self.shape[0])[:, None]
+            off = np.abs(np.asarray(self.cols) - rows)[live]
+            bw = self._bandwidth = int(off.max()) if off.size else 0
+        return bw
 
     def __matmul__(self, x):
         return self.matvec(x)

@@ -163,6 +163,59 @@ def _problem_varcoef(n_target: int, dtype=np.float64, orders: int = 6) -> CSR:
     return CSR(base.indptr, base.indices, jnp.asarray(data), base.shape)
 
 
+def _problem_stencil27(n_target: int, dtype=np.float64) -> CSR:
+    """27-point convection-diffusion stencil on an s×s×s grid.
+
+    All 26 neighbors of the {-1, 0, 1}³ cube couple (face/edge/corner
+    weights 1 / 0.5 / 0.25, upwind-perturbed for nonsymmetry) under a
+    strictly dominant diagonal.  Numerically tame; its purpose is the
+    *column structure*: lexicographic ordering gives bandwidth s² + s + 1,
+    a wide-but-still-local band — the canonical workload for the sharded
+    driver's neighbor-exchange halo SpMV (vs the 7-point stencils, whose
+    band is barely wider than one chunk at small n).
+    """
+    s = max(4, round(n_target ** (1 / 3)))
+    n = s * s * s
+    idx = np.arange(n).reshape(s, s, s)
+    wind = (0.4, 0.2, 0.1)
+    rows, cols, vals = [], [], []
+
+    def add(r, c, v):
+        rows.append(r.ravel())
+        cols.append(c.ravel())
+        vals.append(np.full(r.size, v, dtype))
+
+    total_off = 0.0
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dz in (-1, 0, 1):
+                if dx == dy == dz == 0:
+                    continue
+                dist = abs(dx) + abs(dy) + abs(dz)
+                base = {1: 1.0, 2: 0.5, 3: 0.25}[dist]
+                # upwind bias: downwind couplings weaken, upwind strengthen
+                coeff = -base - 0.1 * (dx * wind[0] + dy * wind[1]
+                                       + dz * wind[2])
+                total_off += abs(coeff)
+                sl_src, sl_dst = [], []
+                for d in (dx, dy, dz):
+                    if d > 0:
+                        sl_src.append(slice(0, -1))
+                        sl_dst.append(slice(1, None))
+                    elif d < 0:
+                        sl_src.append(slice(1, None))
+                        sl_dst.append(slice(0, -1))
+                    else:
+                        sl_src.append(slice(None))
+                        sl_dst.append(slice(None))
+                add(idx[tuple(sl_src)], idx[tuple(sl_dst)], coeff)
+    add(idx, idx, 1.05 * total_off)
+    return csr_from_coo(
+        np.concatenate(rows), np.concatenate(cols), np.concatenate(vals),
+        (n, n),
+    )
+
+
 def _problem_stretched(n_target: int, dtype=np.float64) -> CSR:
     s = max(4, round(n_target ** (1 / 3)))
     rows, cols, vals, n = _stencil3d(s, s, s, wind=(1.5, 0.0, 0.0), diff=0.3,
@@ -177,6 +230,7 @@ PROBLEMS = {
     "synth:widerange": (_problem_widerange, 4.0e-03),
     "synth:varcoef": (_problem_varcoef, 1.0e-11),
     "synth:stretched": (_problem_stretched, 4.0e-06),
+    "synth:stencil27": (_problem_stencil27, 1.0e-13),
 }
 
 

@@ -2,17 +2,27 @@
 
 The sharded solver keeps every vector row-partitioned over the mesh axis:
 each device owns an ``(n_local,)`` chunk.  The Arnoldi matvec therefore
-needs ``y_local = (A x)_local`` from ``x_local``.  Two applications are
+needs ``y_local = (A x)_local`` from ``x_local``.  Three applications are
 provided, selected by :func:`partition_matvec`:
 
-* ``"rows"`` (default for CSR/ELL) — **row-partitioned, gathered-halo**:
-  the operator is converted to ELL and its ``(n, w)`` ``cols``/``vals``
-  arrays enter ``shard_map`` partitioned along dim 0, so each device stores
-  only its ``n/P`` rows.  The operand vector is ``all_gather``ed to full
-  length (the stencil problems' bandwidth makes the true halo most of the
-  vector anyway; a tiled gather is the simple, always-correct halo), then
-  the local rows contract against it.  Per-device operator memory: ``1/P``
-  of the matrix.
+* ``"halo"`` (default for banded CSR/ELL) — **row-partitioned,
+  neighbor-exchange halo**: a host-side probe (:func:`halo_probe`) measures
+  the column bandwidth of the operator and precomputes per-shard halo index
+  maps; at solve time each device ``ppermute``s only its boundary strips to
+  the left/right neighbors (multi-hop when the bandwidth spans several
+  chunks, :func:`repro.dist.collectives.halo_exchange`) and contracts its
+  rows against ``[left halo | local chunk | right halo]``.  Wire cost per
+  matvec: ``O(bandwidth)`` values instead of the ``O(n)`` a gathered
+  operand moves (:func:`~repro.dist.collectives.halo_bytes` vs
+  :func:`~repro.dist.collectives.gather_bytes`).
+
+* ``"rows"`` — **row-partitioned, gathered-halo**: the operator is
+  converted to ELL and its ``(n, w)`` ``cols``/``vals`` arrays enter
+  ``shard_map`` partitioned along dim 0; the operand vector is
+  ``all_gather``ed to full length, then the local rows contract against
+  it.  The always-correct fallback for unstructured sparsity — and what
+  ``"halo"`` falls back to when the probe finds the halo would be ≥ ~half
+  the vector anyway.  Per-device operator memory: ``1/P`` of the matrix.
 
 * ``"replicated"`` — **replicated-operand**: the operator enters
   ``shard_map`` fully replicated (spec ``P()`` on every leaf), each device
@@ -20,18 +30,63 @@ provided, selected by :func:`partition_matvec`:
   works for any pytree operator with ``.matvec``; costs full-matrix memory
   and flops per device, so it is the fallback, not the default.
 
-Both return the same triple, ready to splice into a ``shard_map`` call::
+Operator dims that do not divide the shard count are zero-padded up to the
+next multiple (padded rows carry val 0, padded operand entries are zeros,
+so the padded SpMV embeds the original exactly); callers pad their vectors
+to ``probe.n_pad`` and trim the result.
+
+All modes return the same triple, ready to splice into a ``shard_map``
+call::
 
     operand, in_specs, local_mv = partition_matvec(A, n_shards=P)
     # shard_map(f, in_specs=(in_specs, ...)); inside f:
     y_local = local_mv(operand_local, x_local)
+
+The returned ``local_mv`` carries ``.mode`` (the executed path), ``.probe``
+(the :class:`HaloProbe`) for wire accounting and tests, and ``.exact`` —
+the same partition with lossless transport (identical to ``local_mv``
+unless a compressed halo was requested), which the driver's explicit
+residual recomputations use.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["partition_matvec"]
+from repro.dist.collectives import halo_exchange
+
+__all__ = ["HaloProbe", "halo_probe", "partition_matvec"]
+
+_MODES = ("auto", "halo", "rows", "replicated")
+
+#: a halo this fraction of the (padded) vector or larger -> gather instead
+MAX_HALO_FRAC = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloProbe:
+    """Host-side bandwidth/halo geometry of one (operator, shard count).
+
+    ``strips`` are the per-hop exchange strip lengths (hop 1 first): every
+    strip but the last is a full chunk, and ``sum(strips) == bandwidth`` —
+    the one-sided halo width.  ``mode`` is the partition mode the probe
+    recommends: ``"halo"`` for banded operators whose two-sided halo stays
+    under :data:`MAX_HALO_FRAC` of the padded vector, ``"rows"`` for
+    wide/unstructured ELL-convertible operators, ``"replicated"`` when the
+    operator cannot be row-partitioned at all.
+    """
+
+    n: int              # logical operator dim
+    n_pad: int          # padded dim (multiple of n_shards)
+    n_local: int        # chunk length per shard
+    bandwidth: int      # max |col - row| over nonzeros (one-sided halo)
+    hops: int           # neighbor distance needed on each side
+    strips: tuple       # per-hop strip lengths, hop 1 first
+    mode: str           # recommended partition mode
 
 
 def _ell_arrays(A):
@@ -44,35 +99,148 @@ def _ell_arrays(A):
     return None
 
 
+def _bandwidth_of(A, ell) -> int:
+    if hasattr(A, "bandwidth"):
+        return A.bandwidth()
+    cols, vals = ell
+    live = np.asarray(vals) != 0
+    rows = np.arange(np.asarray(cols).shape[0])[:, None]
+    off = np.abs(np.asarray(cols) - rows)[live]
+    return int(off.max()) if off.size else 0
+
+
+def halo_probe(A, n_shards: int, *,
+               max_halo_frac: float = MAX_HALO_FRAC) -> HaloProbe:
+    """Probe ``A``'s column structure for neighbor-exchange viability.
+
+    Pure host work (numpy over the CSR/ELL index arrays); the result is
+    what :func:`partition_matvec` partitions by and what the wire-bytes
+    accounting (``benchmarks/shard_wire.py``) prices.
+    """
+    n = A.shape[0]
+    n_pad = -(-n // n_shards) * n_shards
+    n_local = n_pad // n_shards
+    ell = _ell_arrays(A)
+    if ell is None:
+        return HaloProbe(n=n, n_pad=n_pad, n_local=n_local, bandwidth=0,
+                         hops=0, strips=(), mode="replicated")
+    bw = _bandwidth_of(A, ell)
+    hops = -(-bw // n_local) if bw else 0
+    strips = tuple(
+        min(n_local, bw - (k - 1) * n_local) for k in range(1, hops + 1)
+    )
+    mode = "halo" if 2 * bw < max_halo_frac * n_pad else "rows"
+    return HaloProbe(n=n, n_pad=n_pad, n_local=n_local, bandwidth=bw,
+                     hops=hops, strips=strips, mode=mode)
+
+
+def _validate_mesh(mesh, axis_name: str, n_shards: int):
+    """Fail fast with a readable error instead of an opaque XLA one."""
+    if mesh is None:
+        return
+    if axis_name not in mesh.axis_names:
+        raise ValueError(
+            f"partition axis {axis_name!r} is not on the mesh "
+            f"(axes: {tuple(mesh.axis_names)}); the local matvec's "
+            f"collectives would fail inside shard_map")
+    if mesh.shape[axis_name] != n_shards:
+        raise ValueError(
+            f"mesh axis {axis_name!r} has size {mesh.shape[axis_name]} "
+            f"but the operator is partitioned over {n_shards} shards")
+
+
+def _padded_ell(ell, n: int, n_pad: int):
+    """Zero-pad ELL arrays to ``n_pad`` rows (padding: col 0, val 0)."""
+    cols = np.asarray(ell[0])
+    vals = np.asarray(ell[1])
+    pad = n_pad - n
+    if pad:
+        cols = np.pad(cols, ((0, pad), (0, 0)))
+        vals = np.pad(vals, ((0, pad), (0, 0)))
+    return cols, vals
+
+
 def partition_matvec(A, n_shards: int, axis_name: str = "basis",
-                     mode: str = "auto"):
+                     mode: str = "auto", *, mesh=None,
+                     compressed_halo: bool = False):
     """Split ``A`` for row-parallel SpMV under ``shard_map``.
 
     Returns ``(operand, in_specs, local_matvec)`` where ``operand`` is the
     pytree of arrays to pass into ``shard_map``, ``in_specs`` the matching
     PartitionSpec tree, and ``local_matvec(operand_local, x_local)`` maps
     this device's ``(n_local,)`` chunk of ``x`` to its chunk of ``A x``.
+
+    ``mode``: ``"auto"`` follows the probe (halo for banded operators,
+    gathered rows for wide/unstructured ones, replicated for bare
+    matvec-only operators); ``"halo"``/``"rows"``/``"replicated"`` force a
+    path — except that ``"halo"`` still falls back to the gathered-operand
+    contraction when the probe finds the two-sided halo would be ≥
+    ``MAX_HALO_FRAC`` of the vector (the exchange would move more than the
+    gather).  The executed path is reported on ``local_matvec.mode``.
+
+    When ``A.shape[0]`` does not divide ``n_shards`` the operator rows are
+    zero-padded to ``probe.n_pad``; pad the operand vectors to match and
+    trim the padded tail of the result (padded rows produce exact zeros).
+
+    ``mesh`` (optional) validates ``axis_name`` against the mesh the caller
+    will run shard_map on; ``compressed_halo`` ships halo strips as FRSZ2
+    codes (:func:`repro.dist.collectives.halo_exchange`).
     """
     n = A.shape[0]
     if A.shape[0] != A.shape[1]:
         raise ValueError(f"matvec partitioning needs a square operator, "
                          f"got shape {A.shape}")
-    if n % n_shards:
-        raise ValueError(
-            f"operator dim {n} does not divide over {n_shards} shards")
-    n_local = n // n_shards
+    if mode not in _MODES:
+        raise ValueError(f"unknown partition mode {mode!r}; "
+                         f"expected one of {_MODES}")
+    _validate_mesh(mesh, axis_name, n_shards)
 
-    ell = _ell_arrays(A) if mode in ("auto", "rows") else None
+    probe = halo_probe(A, n_shards)
+    n_pad, n_local = probe.n_pad, probe.n_local
+
     if mode == "auto":
-        mode = "rows" if ell is not None else "replicated"
-
-    if mode == "rows":
-        if ell is None:
+        mode = probe.mode
+    elif mode == "halo":
+        if probe.mode == "replicated":
             raise ValueError(
-                f"mode='rows' needs an ELL-convertible operator "
+                f"mode='halo' needs an ELL-convertible operator "
                 f"(got {type(A).__name__}); use mode='replicated'")
-        cols, vals = ell
-        operand = (cols, vals)
+        mode = probe.mode        # may fall back to "rows" (halo too wide)
+    elif mode == "rows" and probe.mode == "replicated":
+        raise ValueError(
+            f"mode='rows' needs an ELL-convertible operator "
+            f"(got {type(A).__name__}); use mode='replicated'")
+
+    exact_matvec = None
+    if mode == "halo":
+        cols, vals = _padded_ell(_ell_arrays(A), n, n_pad)
+        # per-shard local column ids into [left halo | chunk | right halo]:
+        # row r of shard p = r // n_local sees global column c at local
+        # position c - p * n_local + bandwidth; padding entries (val 0)
+        # are pinned to 0 so every index is in range by construction.
+        shard_of_row = np.arange(n_pad) // n_local
+        lcols = cols - shard_of_row[:, None] * n_local + probe.bandwidth
+        lcols = np.where(vals == 0, 0, lcols)
+        operand = (jnp.asarray(lcols, jnp.int32), jnp.asarray(vals))
+        in_specs = (P(axis_name, None), P(axis_name, None))
+        strips = probe.strips
+
+        def _halo_matvec(op, x_local, compressed):
+            lcols_l, vals_l = op                      # (n_local, w) each
+            x_ext = halo_exchange(x_local, strips, n_shards, axis_name,
+                                  compressed=compressed)
+            return (vals_l * x_ext[lcols_l].astype(vals_l.dtype)).sum(axis=1)
+
+        def local_matvec(op, x_local):
+            return _halo_matvec(op, x_local, compressed_halo)
+
+        if compressed_halo:
+            def exact_matvec(op, x_local):
+                return _halo_matvec(op, x_local, False)
+
+    elif mode == "rows":
+        cols, vals = _padded_ell(_ell_arrays(A), n, n_pad)
+        operand = (jnp.asarray(cols, jnp.int32), jnp.asarray(vals))
         in_specs = (P(axis_name, None), P(axis_name, None))
 
         def local_matvec(op, x_local):
@@ -80,22 +248,26 @@ def partition_matvec(A, n_shards: int, axis_name: str = "basis",
             x = jax.lax.all_gather(x_local, axis_name, tiled=True)
             return (vals_l * x[cols_l].astype(vals_l.dtype)).sum(axis=1)
 
-        return operand, in_specs, local_matvec
-
-    if mode == "replicated":
+    else:  # replicated
         row_ids = A.row_ids() if hasattr(A, "row_ids") else None
         operand = (A, row_ids)
         in_specs = jax.tree.map(lambda _: P(), operand)
+        pad = n_pad - n
 
         def local_matvec(op, x_local):
             A_full, rid = op
             x = jax.lax.all_gather(x_local, axis_name, tiled=True)
-            y = (A_full.matvec(x, row_ids=rid) if rid is not None
-                 else A_full.matvec(x))
+            y = (A_full.matvec(x[:n], row_ids=rid) if rid is not None
+                 else A_full.matvec(x[:n]))
+            if pad:
+                y = jnp.pad(y, (0, pad))
             i = jax.lax.axis_index(axis_name)
             return jax.lax.dynamic_slice_in_dim(y, i * n_local, n_local)
 
-        return operand, in_specs, local_matvec
-
-    raise ValueError(f"unknown partition mode {mode!r}; "
-                     "expected 'auto', 'rows', or 'replicated'")
+    local_matvec.mode = mode
+    local_matvec.probe = probe
+    # .exact applies the same partition with lossless transport (== the
+    # matvec itself unless a compressed halo was requested): the driver's
+    # explicit residual recomputations ride this one.
+    local_matvec.exact = exact_matvec or local_matvec
+    return operand, in_specs, local_matvec

@@ -199,15 +199,17 @@ def test_shard_validation_errors():
     A, b, rrn = _problem(216)
     with pytest.raises(ValueError, match="devices"):
         gmres(A, b, shard=999, m=5, max_iters=5)
-    # 216 does not divide over 5 shards — >1 shard needs >1 device, so the
-    # divisibility check is exercised through the partitioner directly
+    # 216 does not divide over 5 shards — no longer an error: the
+    # partitioner zero-pads to the next multiple with masked rows
     from repro.sparse import partition_matvec
 
-    with pytest.raises(ValueError, match="divide"):
-        partition_matvec(A, 5)
+    _, _, lmv = partition_matvec(A, 5)
+    assert lmv.probe.n_pad == 220 and lmv.probe.n_local == 44
     with pytest.raises(ValueError, match="matvec"):
         gmres(None, b, matvec=lambda v: v, shard=1, m=5, max_iters=5)
     with pytest.raises(ValueError, match="device driver"):
         gmres(A, b, shard=1, driver="host", m=5, max_iters=5)
     with pytest.raises(ValueError, match="transport"):
         gmres(A, b, shard=1, shard_transport="bogus", m=5, max_iters=5)
+    with pytest.raises(ValueError, match="partition mode"):
+        gmres(A, b, shard=1, shard_matvec="bogus", m=5, max_iters=5)
