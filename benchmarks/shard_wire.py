@@ -22,9 +22,21 @@ approaches one 128-value block (restart length m ≳ 128); the *norm*
 reductions are scalars, so compressing them always ships more bytes than
 a plain 8-byte psum.
 
+``--reorder none,rcm`` adds the operator-planning dimension
+(:mod:`repro.sparse.plan`): each reorder mode is measured separately, so
+on ``synth:unstructured`` the table shows the unlock — the raw operator
+probes to the gathered fallback while the RCM-reordered one takes the
+halo path at a fraction of the wire, with exact f64 parity against the
+unreordered unsharded solve.  ``--check`` turns the acceptance conditions
+(parity exact, halo < 50% of gathered wire whenever both paths ran) into
+a nonzero exit status — the CI smoke step runs ``--quick --check`` on
+``synth:unstructured`` so wire-accounting regressions fail fast.
+
 Run directly (re-execs itself with emulated devices)::
 
     PYTHONPATH=src python -m benchmarks.shard_wire [--quick]
+    PYTHONPATH=src python -m benchmarks.shard_wire \
+        --problem synth:unstructured --reorder none,rcm --check
 """
 from __future__ import annotations
 
@@ -71,92 +83,121 @@ def _inner(args) -> int:
     from repro.dist.collectives import gather_bytes, halo_bytes
     from repro.solver import gmres
     from repro.solver.gmres import _cycle_row_reads
-    from repro.sparse import halo_probe, make_problem, rhs_for
+    from repro.sparse import make_problem, plan_operator, rhs_for
 
     p = args.shards
     n, m = args.n, args.m
     A, target = make_problem(args.problem, n)
     n = A.shape[0]
     b, _ = rhs_for(A)
-    probe = halo_probe(A, p)
+    raw_plan = plan_operator(A, p, reorder="none")
     # per-device bytes of one basis row: backs out the solve's actual
     # re-orthogonalization traffic from its bytes_read accounting
     row_bytes = format_by_name(args.storage,
                                arith_dtype=jnp.float64).nbytes(
-        1, probe.n_local)
+        1, raw_plan.n_local)
 
-    print(f"{args.problem} n={n} (pad {probe.n_pad}) m={m} shards={p} "
-          f"storage={args.storage} bandwidth={probe.bandwidth} "
-          f"strips={probe.strips}")
+    print(f"{args.problem} n={n} (pad {raw_plan.n_pad}) m={m} shards={p} "
+          f"storage={args.storage} raw bandwidth={raw_plan.raw_bandwidth}")
 
-    # -- f64 iteration parity: sharded halo vs the unsharded driver -------
     kw = dict(m=m, max_iters=args.max_iters, target_rrn=target)
     r_un = gmres(A, b, storage="float64", **kw)
-    r_halo = gmres(A, b, storage="float64", shard=p, shard_matvec="halo",
-                   **kw)
-    parity = (r_un.iterations == r_halo.iterations
-              and r_un.restarts == r_halo.restarts)
-    print(f"f64 parity (halo vs unsharded): iters {r_un.iterations} vs "
-          f"{r_halo.iterations}, restarts {r_un.restarts} vs "
-          f"{r_halo.restarts} -> {'EXACT' if parity else 'MISMATCH'}")
 
-    print(f"{'matvec':8s} {'transport':18s} {'iters':>6s} {'cycles':>7s} "
-          f"{'dots/cyc':>10s} {'norms/cyc':>10s} {'matvec/cyc':>11s} "
-          f"{'total/cyc':>10s}  rrn")
     rows = []
-    totals = {}
-    for matvec_mode in args.matvec.split(","):
-        executed = (probe.mode if matvec_mode in ("auto", "halo")
-                    else matvec_mode)
-        for transport in TRANSPORTS:
-            res = gmres(A, b, storage=args.storage, shard=p,
-                        shard_transport=transport,
-                        shard_matvec=matvec_mode, **kw)
-            # one restart record per executed cycle (the +1 early-exit
-            # record only occurs for trivially-converged x0)
-            cycles = max(res.restarts, 1)
-            j_avg = min(max(res.iterations // cycles, 1), m)
-            # rows swept beyond the nominal one-pass model = conditional
-            # MGS re-orth sweeps of ~j_avg+1 rows each (_cycle_row_reads)
-            nominal_rows = cycles * _cycle_row_reads(j_avg, 1)
-            extra_rows = max(res.bytes_read / row_bytes - nominal_rows, 0.0)
-            reorth_per_cycle = int(round(extra_rows / (j_avg + 1) / cycles))
-            compressed = transport != "plain"
-            if executed == "halo":
-                inner_mv = halo_bytes(probe.strips, compressed=compressed)
-                residual_mv = halo_bytes(probe.strips)
-            else:
-                inner_mv = residual_mv = gather_bytes(probe.n_local, p)
-            wire = cycle_wire_bytes(
-                m, j_avg, reorth_per_cycle, passes=1,
-                dots_compressed=compressed,
-                norms_compressed=transport == "compressed+norms",
-                inner_mv_bytes=inner_mv, residual_mv_bytes=residual_mv)
-            rows.append(dict(mode=executed, transport=transport,
-                             iters=res.iterations, cycles=cycles,
-                             rrn=res.rrn, converged=bool(res.converged),
-                             parity=parity, **wire))
-            totals[(executed, transport)] = wire["total"]
-            print(f"{executed:8s} {transport:18s} {res.iterations:6d} "
-                  f"{cycles:7d} {wire['dots']:10d} {wire['norms']:10d} "
-                  f"{wire['matvec']:11d} {wire['total']:10d}  "
-                  f"{res.rrn:.2e}")
-    if ("halo", "plain") in totals and ("rows", "plain") in totals:
-        ratio = totals[("halo", "plain")] / totals[("rows", "plain")]
-        print(f"\nhalo-mode wire bytes per cycle = {100 * ratio:.1f}% of "
-              f"gathered mode (plain transport)")
+    failures = []
+    for rmode in args.reorder.split(","):
+        plan = plan_operator(A, p, reorder=rmode)
+        print(f"\n[reorder={rmode}] {plan.describe()}")
+
+        # -- f64 parity: sharded (this reorder) vs the *unreordered*
+        #    unsharded driver — the permutation must be invisible ---------
+        r_sh = gmres(A, b, storage="float64", shard=p, reorder=rmode, **kw)
+        parity = (r_un.iterations == r_sh.iterations
+                  and r_un.restarts == r_sh.restarts)
+        print(f"f64 parity (sharded/{rmode} vs unsharded/raw): iters "
+              f"{r_un.iterations} vs {r_sh.iterations}, restarts "
+              f"{r_un.restarts} vs {r_sh.restarts} -> "
+              f"{'EXACT' if parity else 'MISMATCH'}")
+        if not parity:
+            failures.append(f"reorder={rmode}: f64 parity mismatch")
+
+        print(f"{'matvec':8s} {'transport':18s} {'iters':>6s} "
+              f"{'cycles':>7s} {'dots/cyc':>10s} {'norms/cyc':>10s} "
+              f"{'matvec/cyc':>11s} {'total/cyc':>10s}  rrn")
+        totals = {}
+        for matvec_mode in args.matvec.split(","):
+            mplan = plan_operator(A, p, reorder=rmode,
+                                  matvec_mode=matvec_mode)
+            executed = mplan.matvec_mode
+            probe = mplan.probe
+            for transport in TRANSPORTS:
+                res = gmres(A, b, storage=args.storage, shard=p,
+                            shard_transport=transport,
+                            shard_matvec=matvec_mode, reorder=rmode, **kw)
+                # one restart record per executed cycle (the +1 early-exit
+                # record only occurs for trivially-converged x0)
+                cycles = max(res.restarts, 1)
+                j_avg = min(max(res.iterations // cycles, 1), m)
+                # rows swept beyond the nominal one-pass model =
+                # conditional MGS re-orth sweeps (_cycle_row_reads)
+                nominal_rows = cycles * _cycle_row_reads(j_avg, 1)
+                extra_rows = max(res.bytes_read / row_bytes - nominal_rows,
+                                 0.0)
+                reorth_per_cycle = int(round(extra_rows / (j_avg + 1)
+                                             / cycles))
+                compressed = transport != "plain"
+                if executed == "halo":
+                    inner_mv = halo_bytes(probe.strips,
+                                          compressed=compressed)
+                    residual_mv = halo_bytes(probe.strips)
+                else:
+                    inner_mv = residual_mv = gather_bytes(probe.n_local, p)
+                wire = cycle_wire_bytes(
+                    m, j_avg, reorth_per_cycle, passes=1,
+                    dots_compressed=compressed,
+                    norms_compressed=transport == "compressed+norms",
+                    inner_mv_bytes=inner_mv, residual_mv_bytes=residual_mv)
+                rows.append(dict(reorder=rmode,
+                                 reorder_executed=mplan.reorder,
+                                 bandwidth=probe.bandwidth,
+                                 mode=executed, transport=transport,
+                                 iters=res.iterations, cycles=cycles,
+                                 rrn=res.rrn, converged=bool(res.converged),
+                                 parity=parity, **wire))
+                totals[(executed, transport)] = wire["total"]
+                print(f"{executed:8s} {transport:18s} {res.iterations:6d} "
+                      f"{cycles:7d} {wire['dots']:10d} {wire['norms']:10d} "
+                      f"{wire['matvec']:11d} {wire['total']:10d}  "
+                      f"{res.rrn:.2e}")
+        if ("halo", "plain") in totals and ("rows", "plain") in totals:
+            ratio = totals[("halo", "plain")] / totals[("rows", "plain")]
+            print(f"halo-mode wire bytes per cycle = {100 * ratio:.1f}% of "
+                  f"gathered mode (plain transport, reorder={rmode})")
+            if args.check and ratio >= 0.5:
+                failures.append(
+                    f"reorder={rmode}: halo/gathered wire ratio "
+                    f"{ratio:.3f} >= 0.5")
+        elif args.check and rmode == "rcm":
+            failures.append(
+                "reorder=rcm: halo path never executed (reordering did "
+                "not unlock it)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)
     print("\nnote: dots compression pays once the psum payload nears one "
           "128-value FRSZ2 block (m+1 >= ~128);\nscalar norm psums are "
           "always cheaper plain (8 B vs one whole wire block).")
+    if args.check and failures:
+        print("\nCHECK FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        return 1
     return 0
 
 
 def run(n: int = 2048, m: int = 30, shards: int = 8, max_iters: int = 4000,
         problem: str = "synth:stencil27", storage: str = "frsz2_32",
-        matvec: str = ",".join(MATVEC_MODES), json_path: str | None = None):
+        matvec: str = ",".join(MATVEC_MODES), reorder: str = "none",
+        check: bool = False, json_path: str | None = None):
     """Spawn the measurement in a subprocess with emulated devices
     (the parent's jax is typically already initialized single-device)."""
     env = dict(os.environ)
@@ -166,7 +207,9 @@ def run(n: int = 2048, m: int = 30, shards: int = 8, max_iters: int = 4000,
     cmd = [sys.executable, "-m", "benchmarks.shard_wire", "--inner",
            "--n", str(n), "--m", str(m), "--shards", str(shards),
            "--max-iters", str(max_iters), "--problem", problem,
-           "--storage", storage, "--matvec", matvec]
+           "--storage", storage, "--matvec", matvec, "--reorder", reorder]
+    if check:
+        cmd += ["--check"]
     if json_path:
         cmd += ["--json", json_path]
     out = subprocess.run(
@@ -193,13 +236,21 @@ def main(argv=None):
     ap.add_argument("--matvec", default=",".join(MATVEC_MODES),
                     help="comma list of matvec modes to measure "
                          "(halo,rows,replicated,auto)")
+    ap.add_argument("--reorder", default="none",
+                    help="comma list of reorder modes to measure "
+                         "(none,rcm,auto); each gets its own table block")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless f64 parity is exact and the "
+                         "halo path (when executed) stays under 50%% of "
+                         "the gathered wire — the CI smoke contract")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
     if args.inner:
         return _inner(args)
     run(n=512 if args.quick else args.n, m=args.m, shards=args.shards,
         max_iters=args.max_iters, problem=args.problem,
-        storage=args.storage, matvec=args.matvec, json_path=args.json)
+        storage=args.storage, matvec=args.matvec, reorder=args.reorder,
+        check=args.check, json_path=args.json)
     return 0
 
 

@@ -89,6 +89,19 @@ class StorageFormat:
     def bits_per_value(self) -> float:  # pragma: no cover - overridden
         raise NotImplementedError
 
+    def eps(self) -> float:
+        """Relative storage error bound of one round-trip through the format.
+
+        The contract behind adaptive-policy auto-thresholds
+        (:meth:`repro.solver.pipeline.AdaptivePolicy.from_target`): a basis
+        vector written and read back differs from the original by at most
+        ``eps()`` in the format's reference scale (machine epsilon for
+        native dtypes, the per-block max for FRSZ2).
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not report a storage epsilon; "
+            "implement eps() to use it with auto-threshold policies")
+
     def nbytes(self, m: int, n: int) -> int:  # pragma: no cover
         raise NotImplementedError
 
@@ -140,6 +153,9 @@ class NativeFormat(StorageFormat):
     def bits_per_value(self) -> float:
         return jnp.dtype(self.dtype).itemsize * 8
 
+    def eps(self) -> float:
+        return float(jnp.finfo(self.dtype).eps)
+
     def empty(self, m: int, n: int):
         return jnp.zeros((m, n), self.dtype)
 
@@ -174,6 +190,12 @@ class FrszFormat(StorageFormat):
 
     def bits_per_value(self) -> float:
         return F.bits_per_value(self.spec)
+
+    def eps(self) -> float:
+        # l-bit code = sign + (l-1) bits of the value normalized to the
+        # block max exponent: truncation error <= 2^-(l-2) of the block max
+        # (the documented frsz2_16 ~2^-14 / frsz2_32 ~2^-30 bounds)
+        return 2.0 ** (2 - self.spec.l)
 
     def _nb(self, n: int) -> int:
         return -(-n // self.spec.bs)
@@ -260,6 +282,9 @@ class MixedFormat(StorageFormat):
     def bits_per_value(self) -> float:
         # amortized over a large basis the tail dominates; nbytes() is exact
         return self.tail.bits_per_value()
+
+    def eps(self) -> float:
+        return max(self.head.eps(), self.tail.eps())
 
     def _split(self, m: int) -> tuple[int, int]:
         kh = min(self.k, m)
@@ -364,6 +389,9 @@ class ShardedFormat(StorageFormat):
 
     def bits_per_value(self) -> float:
         return self.inner.bits_per_value()
+
+    def eps(self) -> float:
+        return self.inner.eps()
 
     def empty(self, m: int, n: int):
         return self.inner.empty(m, n)

@@ -33,6 +33,7 @@ __all__ = [
     "basis_partition_specs",
     "basis_shardings",
     "driver_partition_specs",
+    "vector_partition_spec",
 ]
 
 
@@ -191,6 +192,18 @@ def basis_partition_specs(store, axis: str = "basis"):
         return P(*spec)
 
     return jax.tree.map(visit, store)
+
+
+def vector_partition_spec(axis: str = "basis", batched: bool = False) -> P:
+    """Spec of one row-partitioned solve vector (``b``, ``x0``, ``x``).
+
+    The vector dim is always the trailing one: ``(n,)`` plain or ``(k, n)``
+    with an unsharded batch of right-hand sides in front (the
+    vmap-inside-shard_map composition).  Centralized here so the sharded
+    driver and any future consumer cannot disagree with
+    :func:`driver_partition_specs`' ``x`` entry.
+    """
+    return P(None, axis) if batched else P(axis)
 
 
 def driver_partition_specs(accs, axis: str = "basis", batched: bool = False):

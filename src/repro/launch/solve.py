@@ -28,7 +28,10 @@ picks plain vs FRSZ2-compressed collectives; ``--shard-matvec`` picks the
 row-partitioned SpMV — ``auto`` probes the operator bandwidth and uses the
 neighbor halo exchange for banded operators, the gathered operand
 otherwise) — composes with ``--batch`` for multi-device multi-RHS
-serving.  See the README's multi-device section.
+serving.  ``--reorder`` controls the setup-time RCM bandwidth-reduction
+permutation (``auto`` applies it exactly when it unlocks the halo matvec
+for an unstructured operator; see ``repro.sparse.plan``).  See the
+README's multi-device and operator-planning sections.
 """
 from __future__ import annotations
 
@@ -60,7 +63,7 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                 precond: str | None = None, ortho: str = "mgs",
                 policy: str | None = None, shard: int | None = None,
                 shard_transport: str = "plain", shard_matvec: str = "auto",
-                verbose: bool = True):
+                reorder: str = "auto", verbose: bool = True):
     jax.config.update("jax_enable_x64", True)
     A, rrn = make_problem(problem, n)
     if target_rrn is not None:
@@ -75,7 +78,7 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                   precond=precond, ortho=ortho, m=m, max_iters=max_iters,
                   target_rrn=rrn, shard=shard,
                   shard_transport=shard_transport,
-                  shard_matvec=shard_matvec)
+                  shard_matvec=shard_matvec, reorder=reorder)
         t0 = time.time()
         if batch > 1:
             B = _batch_rhs(A, b, batch)
@@ -98,6 +101,7 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                          ortho=ortho, shard=shard or 1,
                          shard_transport=shard_transport if shard else None,
                          shard_matvec=shard_matvec if shard else None,
+                         reorder=reorder,
                          iters=iters, rrn=res.rrn,
                          converged=conv, x_err=err,
                          restarts=res.restarts, wall_s=wall,
@@ -130,7 +134,8 @@ def main(argv=None):
                     help="orthogonalization scheme")
     ap.add_argument("--policy", default=None,
                     help="per-cycle precision policy run to append, e.g. "
-                         "'adaptive' or "
+                         "'adaptive', 'adaptive:auto' (thresholds derived "
+                         "from the target RRN and format epsilons), or "
                          "'adaptive:float64,frsz2_32@1e-2,frsz2_16@1e-6'")
     ap.add_argument("--shard", type=int, default=None,
                     help="run the whole device-resident solve inside "
@@ -144,6 +149,12 @@ def main(argv=None):
                     help="row-partitioned SpMV: auto probes the operator "
                          "bandwidth (neighbor halo exchange for banded "
                          "operators, gathered operand otherwise)")
+    ap.add_argument("--reorder", default="auto",
+                    choices=["auto", "rcm", "none"],
+                    help="RCM bandwidth-reduction reordering at setup: "
+                         "auto permutes only when it unlocks the sharded "
+                         "halo matvec for an unstructured operator "
+                         "(repro.sparse.plan)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
     rows = solve_suite(args.problem, args.n, args.formats.split(","),
@@ -152,7 +163,8 @@ def main(argv=None):
                        precond=args.precond, ortho=args.ortho,
                        policy=args.policy, shard=args.shard,
                        shard_transport=args.shard_transport,
-                       shard_matvec=args.shard_matvec)
+                       shard_matvec=args.shard_matvec,
+                       reorder=args.reorder)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)

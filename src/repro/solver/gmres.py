@@ -235,7 +235,8 @@ def _cycle_row_reads(j_stop, passes: int, extra_rows=0):
 # ---------------------------------------------------------------------------
 
 
-def _resolve(A, b, storage, policy, m, arith_dtype, matvec, precond, ortho):
+def _resolve(A, b, storage, policy, m, arith_dtype, matvec, precond, ortho,
+             target_rrn=None):
     if arith_dtype is None:
         arith_dtype = b.dtype
     if matvec is None:
@@ -244,7 +245,7 @@ def _resolve(A, b, storage, policy, m, arith_dtype, matvec, precond, ortho):
             matvec = partial(A.matvec, row_ids=row_ids)
         else:
             matvec = A.matvec
-    policy = resolve_policy(policy, storage, arith_dtype)
+    policy = resolve_policy(policy, storage, arith_dtype, target_rrn)
     n = b.shape[0]
     accs = tuple(
         BasisAccessor(fmt=f, m=m + 1, n=n, arith_dtype=arith_dtype)
@@ -253,6 +254,46 @@ def _resolve(A, b, storage, policy, m, arith_dtype, matvec, precond, ortho):
     precond = resolve_preconditioner(precond, A)
     ortho = orthogonalizer_by_name(ortho)
     return accs, policy, arith_dtype, matvec, precond, ortho
+
+
+def _plan_unsharded(A, reorder: str, user_matvec):
+    """Resolve ``reorder`` for a single-device solve; a plan or ``None``.
+
+    ``"auto"`` is a no-op off the sharded path — the permutation only buys
+    wire bytes, and an unsharded solve has no wire.  ``"rcm"`` forces the
+    permutation (the solve then runs on ``plan.operator`` in permuted
+    coordinates; callers map ``b``/``x0`` in and ``x`` back out through
+    the plan).  Plans are content-cached, so repeated solves of the same
+    problem reuse the permutation and its fingerprint.
+    """
+    from repro.sparse.plan import REORDERS, plan_operator
+
+    if reorder not in REORDERS:
+        raise ValueError(f"unknown reorder mode {reorder!r}; "
+                         f"expected one of {REORDERS}")
+    if reorder != "rcm":
+        return None
+    if user_matvec is not None or A is None:
+        raise ValueError(
+            "reorder='rcm' needs an operator with an inspectable sparsity "
+            "pattern (CSR/ELL); a bare matvec callable cannot be reordered")
+    return plan_operator(A, 1, reorder="rcm")
+
+
+def _permuted_precond(precond, plan):
+    """Map a user-supplied preconditioner into the plan's coordinates."""
+    from repro.solver.pipeline import Preconditioner
+
+    if plan is None or plan.perm is None or precond is None:
+        return precond
+    if isinstance(precond, Preconditioner):
+        return precond.permuted(plan.perm)
+    if callable(precond):
+        raise ValueError(
+            "cannot reorder with a bare callable preconditioner hook: its "
+            "coordinate convention is unknown; wrap it in a Preconditioner "
+            "with permuted() or pass reorder='none'")
+    return precond               # names resolve against plan.operator
 
 
 # ---------------------------------------------------------------------------
@@ -518,10 +559,19 @@ _SOLVE_CACHE: OrderedDict = OrderedDict()
 _SOLVE_CACHE_SIZE = 16
 
 
-def _operator_key(A, user_matvec):
-    """Content-based key for the operator, plus any objects to pin."""
+def _operator_key(A, user_matvec, plan=None):
+    """Content-based key for the operator, plus any objects to pin.
+
+    A plan (``repro.sparse.plan.OperatorPlan``) supplies the key directly
+    when it carries a content fingerprint — its ``key`` already folds in
+    the executed reorder and matvec mode, so solves of the same matrix
+    under different plans compile separately and repeated solves under
+    the same plan share.
+    """
     if user_matvec is not None:
         return ("matvec", id(user_matvec)), (user_matvec,)
+    if plan is not None and plan.key[0] is not None:
+        return ("plan", plan.key), ()
     fp = getattr(A, "fingerprint", None)
     if fp is not None:
         return ("op", fp()), ()
@@ -552,12 +602,12 @@ def _lru_cached(cache: OrderedDict, maxsize: int, make_key, build):
 
 
 def _cached_solve(A, user_matvec, batched, matvec, accs, policy, m,
-                  max_iters, eta, target, ortho, precond):
+                  max_iters, eta, target, ortho, precond, plan=None):
     pins: tuple = ()
 
     def make_key():
         nonlocal pins
-        op_key, pins = _operator_key(A, user_matvec)
+        op_key, pins = _operator_key(A, user_matvec, plan)
         pins = pins + (precond,)     # spec() may key on id(fn): keep it alive
         return (op_key, batched, policy.spec(), ortho.name, precond.spec(),
                 accs[0].m, accs[0].n, jnp.dtype(accs[0].arith_dtype).name,
@@ -595,6 +645,7 @@ def gmres(
     shard: int | None = None,
     shard_transport: str = "plain",
     shard_matvec: str = "auto",
+    reorder: str = "auto",
 ) -> GmresResult:
     """Solve A x = b with restarted (CB-)GMRES.
 
@@ -608,7 +659,9 @@ def gmres(
 
     ``policy`` selects the storage format *per restart cycle*: a
     :class:`~repro.solver.pipeline.PrecisionPolicy` or a name
-    (``'adaptive'``, ``'adaptive:float64,frsz2_32@1e-2,frsz2_16@1e-6'``,
+    (``'adaptive'``, ``'adaptive:auto'`` — switch points derived from
+    ``target_rrn`` and the format epsilons,
+    ``'adaptive:float64,frsz2_32@1e-2,frsz2_16@1e-6'``,
     ``'static:frsz2_32'``).  Overrides ``storage`` when given.
     ``precond`` is applied as right preconditioning inside the jitted
     cycle: ``'jacobi'``, a callable ``x -> M^{-1} x``, or a
@@ -634,6 +687,12 @@ def gmres(
     operator's bandwidth — neighbor halo exchange for banded operators,
     gathered operand otherwise), ``"halo"``, ``"rows"``, or
     ``"replicated"`` (see :func:`repro.sparse.shard.partition_matvec`).
+    ``reorder`` applies an RCM bandwidth-reduction permutation at setup
+    (:mod:`repro.sparse.plan`): ``"auto"`` (default) permutes only when it
+    unlocks the sharded halo matvec for an otherwise-unstructured
+    operator; ``"rcm"`` forces the permutation (the solve runs in
+    permuted coordinates; ``b``/``x0`` are mapped in and ``x`` back out
+    transparently); ``"none"`` disables it.
     """
     user_matvec = matvec
     if shard is not None:
@@ -645,22 +704,34 @@ def gmres(
             A, b, x0=x0, storage=storage, policy=policy, precond=precond,
             ortho=ortho, m=m, max_iters=max_iters, target_rrn=target_rrn,
             arith_dtype=arith_dtype, eta=eta, matvec=matvec, shard=shard,
-            transport=shard_transport, partition_mode=shard_matvec)
+            transport=shard_transport, partition_mode=shard_matvec,
+            reorder=reorder)
+    plan = _plan_unsharded(A, reorder, user_matvec)
+    if plan is not None:
+        precond = _permuted_precond(precond, plan)
+        A = plan.operator
+        b = plan.permute(b)
+        if x0 is not None:
+            x0 = plan.permute(x0)
     accs, policy, arith_dtype, matvec, precond, ortho = _resolve(
-        A, b, storage, policy, m, arith_dtype, matvec, precond, ortho)
+        A, b, storage, policy, m, arith_dtype, matvec, precond, ortho,
+        target_rrn)
     b = b.astype(arith_dtype)
 
     if driver == "host":
-        return _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn,
-                           eta, ortho, precond, x0=x0)
-    if driver != "device":
+        res = _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn,
+                          eta, ortho, precond, x0=x0)
+    elif driver != "device":
         raise ValueError(f"unknown driver {driver!r}")
-
-    x0 = jnp.zeros_like(b) if x0 is None else x0.astype(arith_dtype)
-    solve = _cached_solve(A, user_matvec, False, matvec, accs, policy,
-                          m, max_iters, eta, target_rrn, ortho, precond)
-    state = solve(b, x0)
-    return _device_result(state)
+    else:
+        x0 = jnp.zeros_like(b) if x0 is None else x0.astype(arith_dtype)
+        solve = _cached_solve(A, user_matvec, False, matvec, accs, policy,
+                              m, max_iters, eta, target_rrn, ortho, precond,
+                              plan)
+        res = _device_result(solve(b, x0))
+    if plan is not None:
+        res.x = plan.unpermute(res.x)
+    return res
 
 
 def gmres_batched(
@@ -681,6 +752,7 @@ def gmres_batched(
     shard: int | None = None,
     shard_transport: str = "plain",
     shard_matvec: str = "auto",
+    reorder: str = "auto",
 ) -> list[GmresResult]:
     """Solve A X[i] = B[i] for a batch of right-hand sides ``B (k, n)``.
 
@@ -705,20 +777,33 @@ def gmres_batched(
             precond=precond, ortho=ortho, m=m, max_iters=max_iters,
             target_rrn=target_rrn, arith_dtype=arith_dtype, eta=eta,
             matvec=matvec, shard=shard, transport=shard_transport,
-            partition_mode=shard_matvec)
+            partition_mode=shard_matvec, reorder=reorder)
     user_matvec = matvec
+    plan = _plan_unsharded(A, reorder, user_matvec)
+    if plan is not None:
+        precond = _permuted_precond(precond, plan)
+        A = plan.operator
+        B = plan.permute(B)
+        if X0 is not None:
+            X0 = plan.permute(X0)
     accs, policy, arith_dtype, matvec, precond, ortho = _resolve(
-        A, B[0], storage, policy, m, arith_dtype, matvec, precond, ortho)
+        A, B[0], storage, policy, m, arith_dtype, matvec, precond, ortho,
+        target_rrn)
     B = B.astype(arith_dtype)
     X0 = jnp.zeros_like(B) if X0 is None else X0.astype(arith_dtype)
 
     solve = _cached_solve(A, user_matvec, True, matvec, accs, policy,
-                          m, max_iters, eta, target_rrn, ortho, precond)
+                          m, max_iters, eta, target_rrn, ortho, precond,
+                          plan)
     states = solve(B, X0)
     k = B.shape[0]
-    return [
+    results = [
         _device_result(jax.tree.map(lambda a: a[i], states)) for i in range(k)
     ]
+    if plan is not None:
+        for r in results:
+            r.x = plan.unpermute(r.x)
+    return results
 
 
 def cb_gmres(A, b, storage="frsz2_32", **kw) -> GmresResult:

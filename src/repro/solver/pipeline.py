@@ -176,6 +176,22 @@ class Preconditioner:
     def spec(self):  # pragma: no cover - overridden
         raise NotImplementedError
 
+    def permuted(self, perm) -> "Preconditioner":
+        """Equivalent preconditioner in RCM-permuted coordinates.
+
+        When an :class:`~repro.sparse.plan.OperatorPlan` reorders the
+        operator (``P A Pᵀ``), a preconditioner built for the *original*
+        coordinates must be conjugated the same way (``P M⁻¹ Pᵀ``).
+        Name-resolved preconditioners never hit this (they are built from
+        the already-reordered operator); only user-passed instances with
+        positional state do.  ``perm`` maps new indices to old
+        (``perm[new] = old``).
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot be permuted into reordered "
+            "coordinates; build it for the reordered operator (see "
+            "repro.sparse.plan) or pass reorder='none'")
+
     def shard_local(self, axis_name: str, n_local: int,
                     n_pad: int | None = None) -> "Preconditioner":
         """Equivalent preconditioner over the device-local vector chunk.
@@ -206,6 +222,9 @@ class IdentityPreconditioner(Preconditioner):
     def shard_local(self, axis_name, n_local, n_pad=None):
         return self
 
+    def permuted(self, perm):
+        return self
+
 
 class JacobiPreconditioner(Preconditioner):
     """Diagonal scaling ``M = diag(A)`` — the classic fix for row-scaled
@@ -232,6 +251,13 @@ class JacobiPreconditioner(Preconditioner):
 
     def spec(self):
         return ("jacobi", self._digest)
+
+    def permuted(self, perm):
+        new = object.__new__(JacobiPreconditioner)
+        new.inv_diag = self.inv_diag[jnp.asarray(np.asarray(perm))]
+        new._digest = hashlib.sha1(
+            np.asarray(new.inv_diag).tobytes()).hexdigest()
+        return new
 
     def shard_local(self, axis_name, n_local, n_pad=None):
         inv_diag = self.inv_diag
@@ -385,6 +411,35 @@ class AdaptivePolicy(PrecisionPolicy):
     def spec(self):
         return ("adaptive", tuple(self.levels), tuple(self.thresholds))
 
+    @classmethod
+    def from_target(cls, levels, target_rrn: float,
+                    safety: float = 0.5) -> "AdaptivePolicy":
+        """Derive the switch points from the target RRN and format epsilons.
+
+        Inexact-Krylov accounting: a cycle entered at restart residual
+        ``rr`` computes a correction of magnitude ``~rr``, so a basis
+        stored with relative error ``eps`` (:meth:`StorageFormat.eps`)
+        perturbs the final residual by ``~eps * rr``.  Level ``i`` is
+        therefore admissible once ``eps_i * rr <= safety * target_rrn``,
+        i.e. below the threshold ``safety * target_rrn / eps_i`` — the
+        tighter the target, the longer the solve stays in high precision,
+        with no constants to tune per problem.  Thresholds are clipped
+        into ``(0, 1]`` and kept strictly decreasing.
+        """
+        if target_rrn <= 0:
+            raise ValueError(f"target_rrn must be positive, "
+                             f"got {target_rrn}")
+        thresholds = []
+        ceiling = 1.0
+        for fmt in levels[1:]:
+            t = min(safety * float(target_rrn) / fmt.eps(), ceiling)
+            # a later (cheaper) level must activate strictly later
+            if thresholds and t >= thresholds[-1]:
+                t = thresholds[-1] / 2.0
+            thresholds.append(t)
+            ceiling = t
+        return cls(levels=tuple(levels), thresholds=tuple(thresholds))
+
 
 #: default adaptive ladder: full precision until the residual clears 1e-2,
 #: frsz2_32 to 1e-6, frsz2_16 for the long tail — most cycles run at the
@@ -393,15 +448,23 @@ class AdaptivePolicy(PrecisionPolicy):
 _ADAPTIVE_DEFAULT = (("float64", None), ("frsz2_32", 1e-2), ("frsz2_16", 1e-6))
 
 
-def policy_by_name(name: str, *, arith_dtype=jnp.float64, **ctx
+def policy_by_name(name: str, *, arith_dtype=jnp.float64,
+                   target_rrn: float | None = None, **ctx
                    ) -> PrecisionPolicy:
     """Resolve a policy from a name.
 
     ``static:<fmt>`` — :class:`StaticPolicy` over any registered format.
     ``adaptive`` — the default ``float64 -> frsz2_32@1e-2 -> frsz2_16@1e-6``.
+    ``adaptive:auto`` — the same level ladder with switch points *derived*
+    from ``target_rrn`` and the format epsilons
+    (:meth:`AdaptivePolicy.from_target`); without a target it falls back
+    to the fixed default thresholds.
     ``adaptive:<f0>,<f1>@<t1>,<f2>@<t2>,...`` — explicit ladder: the first
     format has no threshold; each later ``fmt@thr`` activates once the
     restart residual falls below ``thr``.
+
+    ``target_rrn`` is threaded through by the solvers (it is their
+    ``target_rrn`` argument); only ``adaptive:auto`` consumes it.
     """
     kind, _, rest = name.partition(":")
     if kind == "static":
@@ -411,7 +474,14 @@ def policy_by_name(name: str, *, arith_dtype=jnp.float64, **ctx
                                            **ctx))
     if kind != "adaptive":
         raise ValueError(f"unknown policy {name!r}")
-    if not rest:
+    if rest == "auto":
+        if target_rrn is not None:
+            levels = tuple(
+                format_by_name(f, arith_dtype=arith_dtype, **ctx)
+                for f, _ in _ADAPTIVE_DEFAULT)
+            return AdaptivePolicy.from_target(levels, target_rrn)
+        ladder = _ADAPTIVE_DEFAULT       # no target: the fixed defaults
+    elif not rest:
         ladder = _ADAPTIVE_DEFAULT
     else:
         ladder = []
@@ -430,12 +500,14 @@ def policy_by_name(name: str, *, arith_dtype=jnp.float64, **ctx
     return AdaptivePolicy(levels=levels, thresholds=thresholds)
 
 
-def resolve_policy(policy, storage, arith_dtype) -> PrecisionPolicy:
+def resolve_policy(policy, storage, arith_dtype,
+                   target_rrn: float | None = None) -> PrecisionPolicy:
     """Combine the ``policy`` / ``storage`` arguments into one policy.
 
     ``policy`` wins when given (object or name); otherwise the storage
     format (object, name, or None -> native arith dtype) becomes a
     :class:`StaticPolicy` — the seed code path, bit for bit.
+    ``target_rrn`` feeds ``adaptive:auto``'s derived thresholds.
     """
     from repro.core.accessor import NativeFormat
 
@@ -443,7 +515,8 @@ def resolve_policy(policy, storage, arith_dtype) -> PrecisionPolicy:
         if isinstance(policy, PrecisionPolicy):
             return policy
         if isinstance(policy, str):
-            return policy_by_name(policy, arith_dtype=arith_dtype)
+            return policy_by_name(policy, arith_dtype=arith_dtype,
+                                  target_rrn=target_rrn)
         raise ValueError(f"unknown policy {policy!r}")
     if storage is None:
         return StaticPolicy(NativeFormat(dtype=arith_dtype))

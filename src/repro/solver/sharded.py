@@ -13,9 +13,12 @@ basis rows, the residual) is row-partitioned along the vector dim over a
   * vector norms become psum-of-local-squares through the
     :class:`~repro.dist.context.DistContext` threaded into the cycle;
   * the matvec is row-partitioned (neighbor halo exchange for banded
-    operators, gathered operand or a replicated fallback otherwise —
-    auto-selected by :func:`repro.sparse.shard.partition_matvec`'s probe,
-    forced with ``partition_mode=``);
+    operators, gathered operand or a replicated fallback otherwise) and
+    all host-side prep — optional RCM reordering (``reorder=``),
+    zero-padding, bandwidth probing, mode arbitration (forced with
+    ``partition_mode=``) — comes from one content-cached
+    :class:`~repro.sparse.plan.OperatorPlan` that
+    :func:`repro.sparse.shard.partition_matvec` consumes;
   * vector dims that do not divide the mesh are zero-padded to the next
     multiple (padded operator rows are masked, so the padded solve embeds
     the original exactly); the returned ``x`` is trimmed back;
@@ -47,12 +50,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.accessor import BasisAccessor, ShardedFormat
 from repro.dist.context import DistContext
-from repro.dist.sharding import driver_partition_specs
+from repro.dist.sharding import driver_partition_specs, vector_partition_spec
 from repro.solver.gmres import (
     _device_result,
     _device_solve_fn,
     _lru_cached,
     _operator_key,
+    _permuted_precond,
 )
 from repro.solver.pipeline import (
     AdaptivePolicy,
@@ -61,6 +65,7 @@ from repro.solver.pipeline import (
     resolve_policy,
     resolve_preconditioner,
 )
+from repro.sparse.plan import plan_operator
 from repro.sparse.shard import partition_matvec
 
 __all__ = ["sharded_gmres"]
@@ -105,12 +110,19 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
                   max_iters: int = 20000, target_rrn: float = 1e-14,
                   arith_dtype=None, eta: float = 0.7071067811865475,
                   matvec=None, shard: int = 1, transport: str = "plain",
-                  axis_name: str = "basis", partition_mode: str = "auto"):
+                  axis_name: str = "basis", partition_mode: str = "auto",
+                  reorder: str = "auto"):
     """Run ``gmres``/``gmres_batched`` semantics under ``shard_map``.
 
     Called through ``gmres(..., shard=P)`` — see that docstring.  ``b`` is
     ``(n,)``, or ``(k, n)`` with ``batched=True``; returns the matching
     :class:`~repro.solver.gmres.GmresResult` (or list of them).
+
+    All host-side operator prep — optional RCM reordering, padding
+    geometry, bandwidth probing, matvec-mode arbitration — comes from one
+    :class:`~repro.sparse.plan.OperatorPlan` (content-cached, so repeated
+    solves skip it); this driver only maps vectors through the plan and
+    splices its partition into ``shard_map``.
     """
     if transport not in _TRANSPORTS:
         raise ValueError(f"unknown shard transport {transport!r}; "
@@ -127,47 +139,51 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
 
     b = jnp.asarray(b)
     n = b.shape[-1]
+    plan, precond = _plan_and_precond(A, p_dev, reorder, partition_mode,
+                                      precond)
+    if plan.n != n:
+        raise ValueError(f"b has trailing dim {n} but the operator "
+                         f"is {plan.n}x{plan.n}")
     # vector dims that do not divide the mesh shard zero-padded: padded
     # operator rows are masked (val 0), so every padded vector entry stays
     # an exact zero through the whole solve and x trims back losslessly
-    n_pad = -(-n // p_dev) * p_dev
-    n_local = n_pad // p_dev
+    n_pad, n_local = plan.n_pad, plan.n_local
     if arith_dtype is None:
         arith_dtype = b.dtype
 
     compressed_dots = transport in ("compressed", "compressed+norms")
-    policy = _wrap_policy(resolve_policy(policy, storage, arith_dtype),
-                          axis_name, compressed_dots)
+    policy = _wrap_policy(
+        resolve_policy(policy, storage, arith_dtype, target_rrn),
+        axis_name, compressed_dots)
     accs = tuple(
         BasisAccessor(fmt=f, m=m + 1, n=n_local, arith_dtype=arith_dtype)
         for f in policy.formats()
     )
-    precond_obj = resolve_preconditioner(precond, A).shard_local(
+    precond_obj = resolve_preconditioner(precond, plan.operator).shard_local(
         axis_name, n_local, n_pad)
     ortho_obj = orthogonalizer_by_name(ortho)
     dist = DistContext(axis_name=axis_name,
                        compressed_norms=transport == "compressed+norms")
 
     solve, operand = _cached_sharded_solve(
-        A, batched, accs, policy, m, max_iters, eta, target_rrn, ortho_obj,
-        precond_obj, dist, p_dev, axis_name, partition_mode,
-        compressed_dots)
+        plan, batched, accs, policy, m, max_iters, eta, target_rrn,
+        ortho_obj, precond_obj, dist, axis_name, compressed_dots)
 
-    b = b.astype(arith_dtype)
+    b = plan.permute(b).astype(arith_dtype)
     if x0 is None:
         x0 = jnp.zeros_like(b)
     else:
-        x0 = jnp.asarray(x0).astype(arith_dtype)
+        x0 = jnp.asarray(x0)
         if x0.shape != b.shape:
             raise ValueError(f"x0 shape {x0.shape} != b shape {b.shape}")
+        x0 = plan.permute(x0).astype(arith_dtype)
     if n_pad != n:
         widths = [(0, 0)] * (b.ndim - 1) + [(0, n_pad - n)]
         b = jnp.pad(b, widths)
         x0 = jnp.pad(x0, widths)
 
     states = solve(operand, b, x0)
-    if n_pad != n:
-        states = dict(states, x=states["x"][..., :n])
+    states = dict(states, x=plan.unpermute(states["x"][..., :n]))
     if not batched:
         return _device_result(states)
     return [
@@ -176,12 +192,34 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
     ]
 
 
-def _build_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
-                         target_rrn, ortho, precond, dist, p_dev, axis_name,
-                         partition_mode, compressed_halo):
-    mesh = Mesh(np.asarray(jax.devices()[:p_dev]), (axis_name,))
+def _plan_and_precond(A, p_dev, reorder, partition_mode, precond):
+    """Plan the operator and carry the preconditioner through the plan's
+    permutation.
+
+    ``reorder="auto"`` declines a permutation the preconditioner cannot
+    follow (a bare callable hook, or a Preconditioner without
+    ``permuted``): auto only buys wire bytes, so an un-permutable
+    preconditioner outweighs it and the solve proceeds unreordered.
+    An explicit ``reorder="rcm"`` propagates the error instead.
+    """
+    plan = plan_operator(A, p_dev, reorder=reorder,
+                         matvec_mode=partition_mode)
+    try:
+        return plan, _permuted_precond(precond, plan)
+    except (ValueError, NotImplementedError):
+        if reorder != "auto":
+            raise
+        plan = plan_operator(A, p_dev, reorder="none",
+                             matvec_mode=partition_mode)
+        return plan, precond
+
+
+def _build_sharded_solve(plan, batched, accs, policy, m, max_iters, eta,
+                         target_rrn, ortho, precond, dist, axis_name,
+                         compressed_halo):
+    mesh = Mesh(np.asarray(jax.devices()[:plan.n_shards]), (axis_name,))
     operand, op_specs, local_mv = partition_matvec(
-        A, p_dev, axis_name, mode=partition_mode, mesh=mesh,
+        plan=plan, axis_name=axis_name, mesh=mesh,
         compressed_halo=compressed_halo)
     # the lossy (compressed-halo) transport serves only the cycle-internal
     # matvecs; the explicit residual recomputations always ride an exact
@@ -204,7 +242,7 @@ def _build_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
     else:
         run = solve_local
 
-    vec_spec = P(None, axis_name) if batched else P(axis_name)
+    vec_spec = vector_partition_spec(axis_name, batched=batched)
     state_specs = driver_partition_specs(accs, axis_name, batched=batched)
     sm = jax.shard_map(run, mesh=mesh,
                        in_specs=(op_specs, vec_spec, vec_spec),
@@ -213,26 +251,28 @@ def _build_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
     return jax.jit(sm), operand
 
 
-def _cached_sharded_solve(A, batched, accs, policy, m, max_iters, eta,
-                          target_rrn, ortho, precond, dist, p_dev, axis_name,
-                          partition_mode, compressed_halo):
+def _cached_sharded_solve(plan, batched, accs, policy, m, max_iters, eta,
+                          target_rrn, ortho, precond, dist, axis_name,
+                          compressed_halo):
     pins: tuple = ()
 
     def make_key():
         nonlocal pins
-        op_key, pins = _operator_key(A, None)
+        # the plan's key already folds in the operator content fingerprint,
+        # the executed reorder, and the resolved matvec mode; operators
+        # without a fingerprint fall back to identity keying (pinned)
+        op_key, pins = _operator_key(plan.operator, None, plan)
         pins = pins + (precond,)
         return (op_key, batched, policy.spec(), ortho.name, precond.spec(),
                 dist.spec(), accs[0].m, accs[0].n,
                 jnp.dtype(accs[0].arith_dtype).name, m, max_iters,
-                float(eta), float(target_rrn), p_dev, axis_name,
-                partition_mode, compressed_halo)
+                float(eta), float(target_rrn), plan.n_shards, axis_name,
+                compressed_halo)
 
     def build():
         solve, operand = _build_sharded_solve(
-            A, batched, accs, policy, m, max_iters, eta, target_rrn, ortho,
-            precond, dist, p_dev, axis_name, partition_mode,
-            compressed_halo)
+            plan, batched, accs, policy, m, max_iters, eta, target_rrn,
+            ortho, precond, dist, axis_name, compressed_halo)
         return solve, operand, pins
 
     ent = _lru_cached(_SHARDED_CACHE, _SHARDED_CACHE_SIZE, make_key, build)

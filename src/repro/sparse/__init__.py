@@ -1,5 +1,7 @@
-"""Sparse formats (CSR/ELL), row-partitioned SpMV, and the synthetic CFD
-problem suite."""
+"""Sparse formats (CSR/ELL), operator planning (reordering, padding,
+halo probing), row-partitioned SpMV, and the synthetic CFD problem suite."""
 from repro.sparse.csr import CSR, ELL, csr_from_coo
+from repro.sparse.plan import OperatorPlan, plan_operator
 from repro.sparse.problems import PROBLEMS, make_problem, problem_suite, rhs_for
+from repro.sparse.reorder import permute_csr, rcm_permutation
 from repro.sparse.shard import HaloProbe, halo_probe, partition_matvec

@@ -1,0 +1,293 @@
+"""Operator planning: one object owns all host-side solve preparation.
+
+Before this module, host-side operator prep was re-derived piecemeal by
+every consumer: ``repro.solver.sharded`` computed zero-padding geometry,
+``repro.sparse.shard`` probed bandwidth and converted/padded ELL arrays,
+and ``repro.solver.gmres``'s compiled-solve cache fingerprinted the
+operator on its own.  Each new prep step (reordering now, 2-D partitioning
+next) would have smeared further.  An :class:`OperatorPlan` centralizes
+the pipeline, computed **once per (operator content, shard config)**:
+
+1. **Reordering** (:mod:`repro.sparse.reorder`) — optional RCM bandwidth
+   reduction.  ``reorder="auto"`` applies it only when it changes the
+   matvec decision: the operator is sharded, its raw band is too wide for
+   the neighbor-exchange halo path, and the RCM band is not.  The
+   permutation is applied to the operator once here; vectors map through
+   :meth:`OperatorPlan.permute` / :meth:`OperatorPlan.unpermute`.
+2. **Padding geometry** — ``n_pad``/``n_local`` for ``n % P != 0``.
+3. **Bandwidth/halo probing** (:func:`repro.sparse.shard.halo_probe`) on
+   the *reordered* operator.
+4. **Matvec-mode selection** — the ``auto``/forced-mode arbitration that
+   used to live in ``partition_matvec``, now probing post-RCM structure.
+5. **Partition material** — the padded (and halo-localized) ELL arrays,
+   memoized on the plan so repeated solves skip the O(nnz) host work.
+6. **Cache-key material** — :attr:`OperatorPlan.key` combines the content
+   fingerprint with the executed reorder and matvec mode; both drivers'
+   compiled-solve caches key on it.
+
+Plans themselves are cached (bounded LRU) by content fingerprint, so
+rebuilding the same problem and solving again reuses the prepared plan —
+permutation, probe, and ELL conversion included.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.reorder import (
+    inverse_permutation,
+    pattern_of,
+    permute_csr,
+    rcm_permutation,
+)
+from repro.sparse.shard import (
+    MAX_HALO_FRAC,
+    HaloProbe,
+    _ell_arrays,
+    halo_probe,
+)
+
+__all__ = ["REORDERS", "OperatorPlan", "plan_operator"]
+
+REORDERS = ("auto", "rcm", "none")
+
+_MODES = ("auto", "halo", "rows", "replicated")
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorPlan:
+    """Host-side prep of one operator for one shard configuration.
+
+    ``operator`` is the solve-side operator: the RCM-permuted matrix when
+    ``reorder == "rcm"`` executed, the original otherwise.  ``perm`` maps
+    new row indices to old (``perm[new] = old``; ``None`` when no
+    reordering was applied); right-hand sides enter the solve through
+    :meth:`permute` and solutions leave through :meth:`unpermute`.
+
+    ``matvec_mode`` is the *resolved* partition mode ("halo" / "rows" /
+    "replicated") after probing the (reordered) operator — what
+    ``partition_matvec`` will execute.  ``probe`` is the halo geometry of
+    the reordered operator; ``raw_bandwidth`` records what the operator
+    looked like before reordering (equal to ``probe.bandwidth`` when no
+    permutation was applied).
+
+    ``key`` is hashable cache-key material: (content fingerprint or None,
+    shard count, executed reorder, resolved mode).  Solve caches combine
+    it with their pipeline specs; a ``None`` fingerprint (bare-matvec
+    operator) means the plan — and anything keyed on it — is uncacheable
+    by content.
+    """
+
+    operator: Any
+    n: int
+    n_shards: int
+    n_pad: int
+    n_local: int
+    requested_reorder: str
+    requested_matvec: str
+    reorder: str                 # executed: "rcm" | "none"
+    perm: np.ndarray | None
+    iperm: np.ndarray | None
+    raw_bandwidth: int
+    probe: HaloProbe
+    matvec_mode: str
+    key: tuple
+
+    # -- vector mapping -----------------------------------------------------
+    def permute(self, v):
+        """Map a vector (trailing dim n) into reordered coordinates."""
+        if self.perm is None:
+            return v
+        return jnp.asarray(v)[..., self.perm]
+
+    def unpermute(self, x):
+        """Map a solve-side vector back to original coordinates."""
+        if self.iperm is None:
+            return x
+        return jnp.asarray(x)[..., self.iperm]
+
+    # -- partition material (memoized: the O(nnz) host work) ---------------
+    def ell_padded(self):
+        """Zero-padded ``(cols, vals)`` ELL arrays of ``operator``.
+
+        Numpy, ``(n_pad, w)`` each; padding rows carry col 0 / val 0 so
+        the padded SpMV embeds the original exactly.  Computed once per
+        plan — repeated solves (plan-cache hits) skip the conversion.
+        """
+        cached = getattr(self, "_ell_padded", None)
+        if cached is None:
+            ell = _ell_arrays(self.operator)
+            cols, vals = np.asarray(ell[0]), np.asarray(ell[1])
+            pad = self.n_pad - self.n
+            if pad:
+                cols = np.pad(cols, ((0, pad), (0, 0)))
+                vals = np.pad(vals, ((0, pad), (0, 0)))
+            cached = (cols, vals)
+            object.__setattr__(self, "_ell_padded", cached)
+        return cached
+
+    def ell_halo_localized(self):
+        """``(lcols, vals)`` with columns relative to the halo-extended
+        chunk ``[left halo | local chunk | right halo]``.
+
+        Row ``r`` of shard ``p = r // n_local`` sees global column ``c``
+        at local position ``c - p * n_local + bandwidth``; padding entries
+        (val 0) are pinned to 0 so every index is in range by
+        construction.  Memoized like :meth:`ell_padded`.
+        """
+        cached = getattr(self, "_ell_halo", None)
+        if cached is None:
+            cols, vals = self.ell_padded()
+            shard_of_row = np.arange(self.n_pad) // self.n_local
+            lcols = (cols - shard_of_row[:, None] * self.n_local
+                     + self.probe.bandwidth)
+            lcols = np.where(vals == 0, 0, lcols)
+            cached = (lcols, vals)
+            object.__setattr__(self, "_ell_halo", cached)
+        return cached
+
+    def describe(self) -> str:
+        """One-line human summary (benchmarks/launch print it)."""
+        re_part = (f"rcm (bw {self.raw_bandwidth} -> "
+                   f"{self.probe.bandwidth})" if self.reorder == "rcm"
+                   else f"none (bw {self.raw_bandwidth})")
+        return (f"plan: n={self.n} pad={self.n_pad} shards={self.n_shards} "
+                f"reorder={re_part} matvec={self.matvec_mode}")
+
+
+def _fingerprint(A) -> str | None:
+    fp = getattr(A, "fingerprint", None)
+    return fp() if fp is not None else None
+
+
+def _resolve_mode(requested: str, probe: HaloProbe, A) -> str:
+    """The auto/forced-mode arbitration (moved from ``partition_matvec``).
+
+    ``auto`` follows the probe; ``halo`` still falls back to the gathered
+    contraction when the probe finds the two-sided halo would be ≥
+    :data:`~repro.sparse.shard.MAX_HALO_FRAC` of the vector; ``rows`` and
+    ``halo`` reject operators that cannot be row-partitioned at all.
+    """
+    if requested == "auto":
+        return probe.mode
+    if requested == "halo":
+        if probe.mode == "replicated":
+            raise ValueError(
+                f"mode='halo' needs an ELL-convertible operator "
+                f"(got {type(A).__name__}); use mode='replicated'")
+        return probe.mode        # may fall back to "rows" (halo too wide)
+    if requested == "rows" and probe.mode == "replicated":
+        raise ValueError(
+            f"mode='rows' needs an ELL-convertible operator "
+            f"(got {type(A).__name__}); use mode='replicated'")
+    return requested
+
+
+_PLAN_CACHE: OrderedDict = OrderedDict()
+_PLAN_CACHE_SIZE = 16
+
+
+def plan_operator(A, n_shards: int = 1, *, reorder: str = "auto",
+                  matvec_mode: str = "auto",
+                  max_halo_frac: float = MAX_HALO_FRAC) -> OperatorPlan:
+    """Build (or fetch) the :class:`OperatorPlan` for one solve setup.
+
+    ``reorder``: ``"none"`` leaves the operator untouched; ``"rcm"``
+    always applies the Reverse Cuthill-McKee permutation (raising for
+    operators without an inspectable pattern); ``"auto"`` applies it only
+    when it flips the sharded matvec from the gathered fallback to the
+    neighbor-exchange halo path — unsharded solves and already-banded
+    operators are left alone, and a permutation that fails to pull the
+    band under the halo threshold is discarded.
+
+    ``matvec_mode`` is the requested partition mode (see
+    :func:`repro.sparse.shard.partition_matvec`); the plan resolves it
+    against the post-reorder probe.
+
+    Plans are cached (bounded LRU) by ``(content fingerprint, n_shards,
+    reorder, matvec_mode)``: rebuilding the same matrix and solving again
+    reuses the prepared plan, skipping the O(nnz) permutation / probe /
+    ELL-conversion host work.  Operators without a content fingerprint
+    are planned uncached.
+    """
+    if reorder not in REORDERS:
+        raise ValueError(f"unknown reorder mode {reorder!r}; "
+                         f"expected one of {REORDERS}")
+    if matvec_mode not in _MODES:
+        raise ValueError(f"unknown partition mode {matvec_mode!r}; "
+                         f"expected one of {_MODES}")
+    if A.shape[0] != A.shape[1]:
+        raise ValueError(f"operator planning needs a square operator, "
+                         f"got shape {A.shape}")
+
+    fp = _fingerprint(A)
+    cache_key = None
+    if fp is not None:
+        cache_key = (fp, int(n_shards), reorder, matvec_mode,
+                     float(max_halo_frac))
+        hit = _PLAN_CACHE.get(cache_key)
+        if hit is not None:
+            _PLAN_CACHE.move_to_end(cache_key)
+            return hit
+
+    plan = _build_plan(A, int(n_shards), reorder, matvec_mode,
+                       max_halo_frac, fp)
+    if cache_key is not None:
+        _PLAN_CACHE[cache_key] = plan
+        while len(_PLAN_CACHE) > _PLAN_CACHE_SIZE:
+            _PLAN_CACHE.popitem(last=False)
+    return plan
+
+
+def _build_plan(A, n_shards: int, reorder: str, matvec_mode: str,
+                max_halo_frac: float, fp: str | None) -> OperatorPlan:
+    raw_probe = halo_probe(A, n_shards, max_halo_frac=max_halo_frac)
+    raw_bw = raw_probe.bandwidth
+
+    op, perm, probe, executed = A, None, raw_probe, "none"
+    want_halo = matvec_mode in ("auto", "halo")
+    if reorder == "rcm" or (
+        reorder == "auto" and want_halo and n_shards > 1
+        and raw_probe.mode == "rows"
+    ):
+        if pattern_of(A) is None:
+            if reorder == "rcm":
+                raise ValueError(
+                    f"reorder='rcm' needs an operator with an inspectable "
+                    f"sparsity pattern (CSR/ELL); got {type(A).__name__}")
+            # auto: bare-matvec operators simply cannot be reordered
+        else:
+            perm_try = rcm_permutation(A)
+            op_try = permute_csr(A, perm_try)
+            probe_try = halo_probe(op_try, n_shards,
+                                   max_halo_frac=max_halo_frac)
+            # auto adopts the permutation only when it unlocks the halo
+            # path; forced rcm keeps it regardless (tests/benchmarks want
+            # the deterministic permuted system)
+            if reorder == "rcm" or probe_try.mode == "halo":
+                op, perm, probe, executed = (op_try, perm_try, probe_try,
+                                             "rcm")
+
+    mode = _resolve_mode(matvec_mode, probe, op)
+    op_fp = _fingerprint(op) if executed == "rcm" else fp
+    key = (op_fp, int(n_shards), executed, mode)
+    return OperatorPlan(
+        operator=op,
+        n=A.shape[0],
+        n_shards=n_shards,
+        n_pad=probe.n_pad,
+        n_local=probe.n_local,
+        requested_reorder=reorder,
+        requested_matvec=matvec_mode,
+        reorder=executed,
+        perm=perm,
+        iperm=None if perm is None else inverse_permutation(perm),
+        raw_bandwidth=raw_bw,
+        probe=probe,
+        matvec_mode=mode,
+        key=key,
+    )

@@ -20,6 +20,12 @@ unavailable in this offline container, so we generate problems with the same
   preconditioning is decisive (the preconditioner-hook showcase).
 * ``synth:stretched``   — mildly stretched-grid convection-diffusion
   (StocF-1465-like, moderate conditioning).
+* ``synth:stencil27``   — 27-point stencil on a cube: wide-but-local band
+  (the sharded halo-SpMV workload).
+* ``synth:unstructured``— randomly row/col-permuted 27-point stencil on an
+  elongated grid: raw bandwidth ~n, so the sharded matvec falls back to
+  the gathered path until an RCM reordering restores the band (the
+  operator-planning showcase).
 
 Every generator returns ``(CSR, name)`` with a deterministic layout; the
 right-hand side convention follows the paper (Sec. V-B): ``x_sol = s/||s||``
@@ -163,20 +169,16 @@ def _problem_varcoef(n_target: int, dtype=np.float64, orders: int = 6) -> CSR:
     return CSR(base.indptr, base.indices, jnp.asarray(data), base.shape)
 
 
-def _problem_stencil27(n_target: int, dtype=np.float64) -> CSR:
-    """27-point convection-diffusion stencil on an s×s×s grid.
+def _stencil27_box(nx: int, ny: int, nz: int, dtype=np.float64) -> CSR:
+    """27-point convection-diffusion stencil on an nx×ny×nz grid.
 
     All 26 neighbors of the {-1, 0, 1}³ cube couple (face/edge/corner
     weights 1 / 0.5 / 0.25, upwind-perturbed for nonsymmetry) under a
-    strictly dominant diagonal.  Numerically tame; its purpose is the
-    *column structure*: lexicographic ordering gives bandwidth s² + s + 1,
-    a wide-but-still-local band — the canonical workload for the sharded
-    driver's neighbor-exchange halo SpMV (vs the 7-point stencils, whose
-    band is barely wider than one chunk at small n).
+    strictly dominant diagonal.  Lexicographic ordering gives bandwidth
+    ny·nz + nz + 1.
     """
-    s = max(4, round(n_target ** (1 / 3)))
-    n = s * s * s
-    idx = np.arange(n).reshape(s, s, s)
+    n = nx * ny * nz
+    idx = np.arange(n).reshape(nx, ny, nz)
     wind = (0.4, 0.2, 0.1)
     rows, cols, vals = [], [], []
 
@@ -216,6 +218,44 @@ def _problem_stencil27(n_target: int, dtype=np.float64) -> CSR:
     )
 
 
+def _problem_stencil27(n_target: int, dtype=np.float64) -> CSR:
+    """27-point stencil on an s×s×s cube (see :func:`_stencil27_box`).
+
+    Numerically tame; its purpose is the *column structure*: lexicographic
+    ordering gives bandwidth s² + s + 1, a wide-but-still-local band — the
+    canonical workload for the sharded driver's neighbor-exchange halo
+    SpMV (vs the 7-point stencils, whose band is barely wider than one
+    chunk at small n).
+    """
+    s = max(4, round(n_target ** (1 / 3)))
+    return _stencil27_box(s, s, s, dtype=dtype)
+
+
+def _problem_unstructured(n_target: int, dtype=np.float64) -> CSR:
+    """Randomly row/col-permuted 27-point stencil: the RCM showcase.
+
+    A fixed random *symmetric* permutation of :func:`_stencil27_box` on an
+    elongated (8s)×s×s grid — same spectrum and same per-row structure as
+    the banded original (the permutation is a similarity transform), but
+    the lexicographic locality is destroyed: raw column bandwidth is ~n,
+    so the sharded matvec probe falls back to the gathered all-gather
+    path.  Reverse Cuthill-McKee (``reorder="rcm"``/``"auto"``,
+    :mod:`repro.sparse.reorder`) recovers a narrow band (≈ 2·s² on the
+    elongated grid vs the lexicographic s² + s + 1) and unlocks the
+    neighbor-exchange halo path — the ``benchmarks/shard_wire.py``
+    demonstration.  The long thin domain is deliberate: it is the regime
+    where a bandwidth-reducing ordering exists and is decisively narrower
+    than the gather threshold at small test sizes (a cube's BFS level
+    sets are ~3s², which leaves no headroom below n ≈ 10⁴).
+    """
+    s = max(4, round((n_target / 8) ** (1 / 3)))
+    base = _stencil27_box(8 * s, s, s, dtype=dtype)
+    from repro.sparse.reorder import permute_csr
+
+    scramble = np.random.default_rng(5).permutation(base.shape[0])
+    return permute_csr(base, scramble)
+
+
 def _problem_stretched(n_target: int, dtype=np.float64) -> CSR:
     s = max(4, round(n_target ** (1 / 3)))
     rows, cols, vals, n = _stencil3d(s, s, s, wind=(1.5, 0.0, 0.0), diff=0.3,
@@ -231,13 +271,19 @@ PROBLEMS = {
     "synth:varcoef": (_problem_varcoef, 1.0e-11),
     "synth:stretched": (_problem_stretched, 4.0e-06),
     "synth:stencil27": (_problem_stencil27, 1.0e-13),
+    "synth:unstructured": (_problem_unstructured, 1.0e-13),
 }
 
 
 def make_problem(name: str, n: int = 8000, dtype=np.float64):
     """Returns (A: CSR, target_rrn: float).  Target RRNs mirror Table I's
     per-problem calibration (achievable accuracy + wiggle room)."""
-    gen, rrn = PROBLEMS[name]
+    try:
+        gen, rrn = PROBLEMS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown problem {name!r}; available problems: "
+            f"{', '.join(sorted(PROBLEMS))}") from None
     return gen(n, dtype=dtype), rrn
 
 

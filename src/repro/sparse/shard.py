@@ -43,10 +43,17 @@ call::
     y_local = local_mv(operand_local, x_local)
 
 The returned ``local_mv`` carries ``.mode`` (the executed path), ``.probe``
-(the :class:`HaloProbe`) for wire accounting and tests, and ``.exact`` —
-the same partition with lossless transport (identical to ``local_mv``
-unless a compressed halo was requested), which the driver's explicit
-residual recomputations use.
+(the :class:`HaloProbe`), ``.plan`` (the
+:class:`~repro.sparse.plan.OperatorPlan` the partition was built from —
+wire accounting and tests read it), and ``.exact`` — the same partition
+with lossless transport (identical to ``local_mv`` unless a compressed
+halo was requested), which the driver's explicit residual recomputations
+use.
+
+Host-side preparation (bandwidth probing, mode arbitration, optional RCM
+reordering, zero-padding, ELL conversion) is owned by
+:mod:`repro.sparse.plan`; this module keeps only the shard_map glue and
+the local contraction kernels.
 """
 from __future__ import annotations
 
@@ -60,8 +67,6 @@ from jax.sharding import PartitionSpec as P
 from repro.dist.collectives import halo_exchange
 
 __all__ = ["HaloProbe", "halo_probe", "partition_matvec"]
-
-_MODES = ("auto", "halo", "rows", "replicated")
 
 #: a halo this fraction of the (padded) vector or larger -> gather instead
 MAX_HALO_FRAC = 0.5
@@ -149,26 +154,22 @@ def _validate_mesh(mesh, axis_name: str, n_shards: int):
             f"but the operator is partitioned over {n_shards} shards")
 
 
-def _padded_ell(ell, n: int, n_pad: int):
-    """Zero-pad ELL arrays to ``n_pad`` rows (padding: col 0, val 0)."""
-    cols = np.asarray(ell[0])
-    vals = np.asarray(ell[1])
-    pad = n_pad - n
-    if pad:
-        cols = np.pad(cols, ((0, pad), (0, 0)))
-        vals = np.pad(vals, ((0, pad), (0, 0)))
-    return cols, vals
-
-
-def partition_matvec(A, n_shards: int, axis_name: str = "basis",
-                     mode: str = "auto", *, mesh=None,
-                     compressed_halo: bool = False):
-    """Split ``A`` for row-parallel SpMV under ``shard_map``.
+def partition_matvec(A=None, n_shards: int | None = None,
+                     axis_name: str = "basis", mode: str = "auto", *,
+                     mesh=None, compressed_halo: bool = False, plan=None):
+    """Split an operator for row-parallel SpMV under ``shard_map``.
 
     Returns ``(operand, in_specs, local_matvec)`` where ``operand`` is the
     pytree of arrays to pass into ``shard_map``, ``in_specs`` the matching
     PartitionSpec tree, and ``local_matvec(operand_local, x_local)`` maps
     this device's ``(n_local,)`` chunk of ``x`` to its chunk of ``A x``.
+
+    The host-side prep — probing, mode arbitration, padding, ELL
+    conversion — lives in an :class:`~repro.sparse.plan.OperatorPlan`.
+    Pass one as ``plan=`` (the sharded driver does: the plan may have
+    RCM-reordered the operator, and its prepared arrays are memoized);
+    or pass ``(A, n_shards, mode)`` and a reorder-free plan is built
+    here, preserving the original call shape.
 
     ``mode``: ``"auto"`` follows the probe (halo for banded operators,
     gathered rows for wide/unstructured ones, replicated for bare
@@ -178,49 +179,42 @@ def partition_matvec(A, n_shards: int, axis_name: str = "basis",
     ``MAX_HALO_FRAC`` of the vector (the exchange would move more than the
     gather).  The executed path is reported on ``local_matvec.mode``.
 
-    When ``A.shape[0]`` does not divide ``n_shards`` the operator rows are
-    zero-padded to ``probe.n_pad``; pad the operand vectors to match and
-    trim the padded tail of the result (padded rows produce exact zeros).
+    When the operator dim does not divide ``n_shards`` the operator rows
+    are zero-padded to ``probe.n_pad``; pad the operand vectors to match
+    and trim the padded tail of the result (padded rows produce exact
+    zeros).
 
     ``mesh`` (optional) validates ``axis_name`` against the mesh the caller
     will run shard_map on; ``compressed_halo`` ships halo strips as FRSZ2
     codes (:func:`repro.dist.collectives.halo_exchange`).
     """
-    n = A.shape[0]
-    if A.shape[0] != A.shape[1]:
-        raise ValueError(f"matvec partitioning needs a square operator, "
-                         f"got shape {A.shape}")
-    if mode not in _MODES:
-        raise ValueError(f"unknown partition mode {mode!r}; "
-                         f"expected one of {_MODES}")
+    if plan is None:
+        from repro.sparse.plan import plan_operator
+
+        if A is None or n_shards is None:
+            raise ValueError(
+                "partition_matvec needs either plan= or (A, n_shards)")
+        plan = plan_operator(A, n_shards, reorder="none", matvec_mode=mode)
+    elif n_shards is not None and n_shards != plan.n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} conflicts with the plan's "
+            f"{plan.n_shards}; pass one or the other")
+    elif mode != "auto" and mode != plan.requested_matvec:
+        raise ValueError(
+            f"mode={mode!r} conflicts with the plan's requested "
+            f"{plan.requested_matvec!r}; build the plan with this mode")
+    A = plan.operator
+    n_shards = plan.n_shards
     _validate_mesh(mesh, axis_name, n_shards)
 
-    probe = halo_probe(A, n_shards)
-    n_pad, n_local = probe.n_pad, probe.n_local
-
-    if mode == "auto":
-        mode = probe.mode
-    elif mode == "halo":
-        if probe.mode == "replicated":
-            raise ValueError(
-                f"mode='halo' needs an ELL-convertible operator "
-                f"(got {type(A).__name__}); use mode='replicated'")
-        mode = probe.mode        # may fall back to "rows" (halo too wide)
-    elif mode == "rows" and probe.mode == "replicated":
-        raise ValueError(
-            f"mode='rows' needs an ELL-convertible operator "
-            f"(got {type(A).__name__}); use mode='replicated'")
+    probe = plan.probe
+    n_pad, n_local = plan.n_pad, plan.n_local
+    mode = plan.matvec_mode
+    n = plan.n
 
     exact_matvec = None
     if mode == "halo":
-        cols, vals = _padded_ell(_ell_arrays(A), n, n_pad)
-        # per-shard local column ids into [left halo | chunk | right halo]:
-        # row r of shard p = r // n_local sees global column c at local
-        # position c - p * n_local + bandwidth; padding entries (val 0)
-        # are pinned to 0 so every index is in range by construction.
-        shard_of_row = np.arange(n_pad) // n_local
-        lcols = cols - shard_of_row[:, None] * n_local + probe.bandwidth
-        lcols = np.where(vals == 0, 0, lcols)
+        lcols, vals = plan.ell_halo_localized()
         operand = (jnp.asarray(lcols, jnp.int32), jnp.asarray(vals))
         in_specs = (P(axis_name, None), P(axis_name, None))
         strips = probe.strips
@@ -239,7 +233,7 @@ def partition_matvec(A, n_shards: int, axis_name: str = "basis",
                 return _halo_matvec(op, x_local, False)
 
     elif mode == "rows":
-        cols, vals = _padded_ell(_ell_arrays(A), n, n_pad)
+        cols, vals = plan.ell_padded()
         operand = (jnp.asarray(cols, jnp.int32), jnp.asarray(vals))
         in_specs = (P(axis_name, None), P(axis_name, None))
 
@@ -266,6 +260,7 @@ def partition_matvec(A, n_shards: int, axis_name: str = "basis",
 
     local_matvec.mode = mode
     local_matvec.probe = probe
+    local_matvec.plan = plan
     # .exact applies the same partition with lossless transport (== the
     # matvec itself unless a compressed halo was requested): the driver's
     # explicit residual recomputations ride this one.

@@ -147,6 +147,26 @@ out["compressed_halo"] = dict(
     it1=c1.iterations, it8=c8.iterations, rrn1=c1.rrn, rrn8=c8.rrn,
     conv=bool(c1.converged and c8.converged))
 
+# -- RCM reorder unlock: unstructured operator takes the halo path ----------
+from repro.sparse import plan_operator
+
+Au, tu = make_problem("synth:unstructured", 2048)
+bu, _ = rhs_for(Au)
+pl_raw = plan_operator(Au, 8, reorder="none")
+pl_rcm = plan_operator(Au, 8, reorder="auto")
+kwu = dict(m=20, max_iters=2000, target_rrn=tu, storage="float64")
+u1 = gmres(Au, bu, **kwu)
+u8_raw = gmres(Au, bu, shard=8, reorder="none", **kwu)
+u8_rcm = gmres(Au, bu, shard=8, reorder="auto", **kwu)
+out["reorder"] = dict(
+    raw_mode=pl_raw.matvec_mode, rcm_mode=pl_rcm.matvec_mode,
+    executed=pl_rcm.reorder, raw_bw=pl_rcm.raw_bandwidth,
+    rcm_bw=pl_rcm.probe.bandwidth,
+    it1=u1.iterations, it_raw=u8_raw.iterations, it_rcm=u8_rcm.iterations,
+    rrn1=u1.rrn, rrn_rcm=u8_rcm.rrn,
+    conv=bool(u1.converged and u8_raw.converged and u8_rcm.converged),
+    x_err=float(np.max(np.abs(np.asarray(u1.x) - np.asarray(u8_rcm.x)))))
+
 print(json.dumps(out))
 """
 
@@ -206,6 +226,18 @@ def test_halo_matvec_multidevice():
     assert ch["conv"], ch
     assert abs(ch["it1"] - ch["it8"]) <= 2, ch
     assert abs(ch["rrn1"] - ch["rrn8"]) <= 1e-10, ch
+
+    # RCM reorder unlock (ISSUE 5): the raw unstructured operator falls
+    # back to the gathered path; auto-reorder adopts RCM, takes the halo
+    # path, and keeps exact f64 parity with the unreordered solve
+    ro = res["reorder"]
+    assert ro["raw_mode"] == "rows", ro
+    assert ro["executed"] == "rcm" and ro["rcm_mode"] == "halo", ro
+    assert ro["rcm_bw"] < ro["raw_bw"], ro
+    assert ro["conv"], ro
+    assert ro["it1"] == ro["it_raw"] == ro["it_rcm"], ro
+    assert abs(ro["rrn1"] - ro["rrn_rcm"]) <= 1e-10, ro
+    assert ro["x_err"] < 1e-10, ro
 
 
 # ---------------------------------------------------------------------------

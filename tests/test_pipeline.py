@@ -155,6 +155,50 @@ def test_policy_name_parsing():
         policy_by_name("adaptive:float64,frsz2_32@1e-6,frsz2_16@1e-6")
 
 
+def test_adaptive_auto_thresholds_derivation():
+    """adaptive:auto derives the switch points from the target RRN and the
+    format epsilons (thr_i = safety * target / eps_i), falling back to the
+    fixed 1e-2/1e-6 defaults when no target is available."""
+    fixed = policy_by_name("adaptive")
+    no_target = policy_by_name("adaptive:auto")
+    assert no_target.thresholds == fixed.thresholds == (1e-2, 1e-6)
+
+    target = 4e-14
+    pol = policy_by_name("adaptive:auto", target_rrn=target)
+    assert [f.name for f in pol.levels] == ["float64", "frsz2_32",
+                                            "frsz2_16"]
+    eps32, eps16 = pol.levels[1].eps(), pol.levels[2].eps()
+    assert eps32 == 2.0**-30 and eps16 == 2.0**-14
+    np.testing.assert_allclose(pol.thresholds,
+                               (0.5 * target / eps32, 0.5 * target / eps16))
+    # strictly decreasing, as AdaptivePolicy requires
+    assert pol.thresholds[0] > pol.thresholds[1] > 0
+    # a tighter target pushes every switch point down (stays high-precision
+    # longer); a looser target the other way — no per-problem constants
+    tighter = policy_by_name("adaptive:auto", target_rrn=target / 100)
+    looser = policy_by_name("adaptive:auto", target_rrn=target * 100)
+    assert all(a < b < c for a, b, c in zip(
+        tighter.thresholds, pol.thresholds, looser.thresholds))
+    with pytest.raises(ValueError, match="positive"):
+        AdaptivePolicy.from_target(pol.levels, 0.0)
+
+
+def test_adaptive_auto_converges_to_target():
+    """End to end: the derived ladder reaches the per-problem target on
+    both drivers with identical restart schedules, and still reads fewer
+    basis bytes than uniform float64 storage."""
+    A, b, _, rrn = _problem()
+    kw = dict(policy="adaptive:auto", m=10, max_iters=6000, target_rrn=rrn)
+    rd = gmres(A, b, **kw)
+    rh = gmres(A, b, driver="host", **kw)
+    assert rd.converged and rd.rrn <= rrn
+    assert rh.iterations == rd.iterations
+    assert rh.restarts == rd.restarts
+    f64 = gmres(A, b, storage="float64", m=10, max_iters=6000,
+                target_rrn=rrn)
+    assert rd.bytes_read < f64.bytes_read
+
+
 def test_static_policy_matches_storage_argument():
     """policy='static:<fmt>' is the same code path as storage='<fmt>'."""
     A, b, _, rrn = _problem(n=256)

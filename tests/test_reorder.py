@@ -1,0 +1,296 @@
+"""RCM reordering + operator planning (ISSUE 5).
+
+The permutation is a setup-time similarity transform, so a reordered
+solve must be indistinguishable from the plain one: same iteration count,
+same restart schedule, and the un-permuted solution equal to machine
+precision (host and device drivers; the 8-device sharded parity lives in
+``tests/test_halo_matvec.py``'s subprocess).  On ``synth:unstructured``
+the bandwidth must strictly decrease — that is the whole point — and
+plans must be content-cached so a second solve builds no new plan.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.solver import gmres
+from repro.solver.gmres import _SOLVE_CACHE, gmres_batched
+from repro.solver.pipeline import JacobiPreconditioner
+from repro.sparse import make_problem, plan_operator, rhs_for
+from repro.sparse.csr import csr_from_coo
+from repro.sparse.plan import _PLAN_CACHE
+from repro.sparse.reorder import (
+    inverse_permutation,
+    permute_csr,
+    rcm_permutation,
+)
+
+
+def _random_system(seed: int):
+    """Small diagonally-dominant sparse system with scattered couplings."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 160))
+    k = 4 * n
+    ri = rng.integers(0, n, k)
+    ci = rng.integers(0, n, k)
+    off = np.unique(np.stack([ri, ci]), axis=1)
+    off = off[:, off[0] != off[1]]
+    vals = rng.uniform(-1.0, 1.0, off.shape[1])
+    # strict diagonal dominance -> clean, fast GMRES convergence
+    diag = np.full(n, 1.0)
+    np.add.at(diag, off[0], np.abs(vals))
+    d = np.arange(n)
+    A = csr_from_coo(np.concatenate([off[0], d]),
+                     np.concatenate([off[1], d]),
+                     np.concatenate([vals, 2.0 * diag]), (n, n))
+    b = jnp.asarray(rng.standard_normal(n))
+    return A, b
+
+
+# ---------------------------------------------------------------------------
+# the permutation itself
+# ---------------------------------------------------------------------------
+
+
+def test_rcm_bandwidth_strictly_decreases_on_unstructured():
+    """Acceptance: synth:unstructured has raw bandwidth ~n (the random
+    scramble destroys locality); RCM restores a narrow band."""
+    A, _ = make_problem("synth:unstructured", 512)
+    n = A.shape[0]
+    raw_bw = A.bandwidth()
+    assert raw_bw > 0.9 * n                   # genuinely unstructured
+    perm = rcm_permutation(A)
+    B = permute_csr(A, perm)
+    assert B.bandwidth() < raw_bw             # strictly decreases
+    assert B.bandwidth() < n // 8             # and decisively: banded now
+
+
+def test_rcm_permutation_is_symmetric_similarity():
+    A, _ = make_problem("synth:unstructured", 512)
+    n = A.shape[0]
+    perm = rcm_permutation(A)
+    assert np.array_equal(np.sort(perm), np.arange(n))
+    iperm = inverse_permutation(perm)
+    assert np.array_equal(perm[iperm], np.arange(n))
+    B = permute_csr(A, perm)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    # (P A Pᵀ)(P x) == P (A x): same operator in relabelled coordinates
+    np.testing.assert_allclose(np.asarray(B.matvec(x[perm])),
+                               np.asarray(A.matvec(x))[perm],
+                               rtol=1e-13, atol=1e-13)
+    assert B.nnz == A.nnz and B.shape == A.shape
+
+
+def test_rcm_on_ell_operator():
+    """ELL operators reorder too: the pattern comes from their live
+    entries and the permuted operator comes back as a normalized CSR."""
+    A, _ = make_problem("synth:unstructured", 512)
+    E = A.to_ell()
+    perm = rcm_permutation(E)
+    B = permute_csr(E, perm)
+    np.testing.assert_array_equal(np.asarray(B.indptr),
+                                  np.asarray(permute_csr(A, perm).indptr))
+    p = plan_operator(E, 8, reorder="auto")
+    assert p.reorder == "rcm" and p.matvec_mode == "halo"
+
+
+def test_rcm_needs_a_pattern():
+    class MatvecOnly:
+        shape = (8, 8)
+
+        def matvec(self, x):
+            return x
+
+    with pytest.raises(ValueError, match="sparsity pattern"):
+        rcm_permutation(MatvecOnly())
+    A, _ = make_problem("synth:lung", 32)
+    with pytest.raises(ValueError, match="permutation length"):
+        permute_csr(A, np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# solve parity: permute -> solve -> un-permute == plain solve
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rcm_solve_parity_property(seed):
+    """Permute -> solve -> un-permute matches the plain f64 solve on both
+    drivers: identical iteration counts and restart schedules, solution
+    and residual equal to roundoff (the permutation only changes the
+    reduction *order* inside norms and dots)."""
+    A, b = _random_system(seed)
+    kw = dict(m=12, max_iters=600, target_rrn=1e-11, storage="float64")
+    for driver in ("device", "host"):
+        r0 = gmres(A, b, driver=driver, reorder="none", **kw)
+        r1 = gmres(A, b, driver=driver, reorder="rcm", **kw)
+        assert r1.iterations == r0.iterations, (driver, seed)
+        assert r1.restarts == r0.restarts, (driver, seed)
+        assert r1.converged == r0.converged, (driver, seed)
+        np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r0.x),
+                                   rtol=1e-9, atol=1e-13)
+        np.testing.assert_allclose(r1.rrn, r0.rrn, rtol=1e-5, atol=1e-16)
+
+
+def test_rcm_parity_on_unstructured_problem():
+    A, target = make_problem("synth:unstructured", 512)
+    b, _ = rhs_for(A)
+    kw = dict(m=20, max_iters=2000, target_rrn=target)
+    r0 = gmres(A, b, reorder="none", **kw)
+    r1 = gmres(A, b, reorder="rcm", **kw)
+    assert r0.converged and r1.converged
+    assert r1.iterations == r0.iterations
+    assert r1.restarts == r0.restarts
+    np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r0.x),
+                               rtol=1e-9, atol=1e-13)
+
+
+def test_rcm_batched_and_x0_parity():
+    A, target = make_problem("synth:unstructured", 512)
+    b, _ = rhs_for(A)
+    B = jnp.stack([b, 1.1 * b])
+    kw = dict(m=20, max_iters=2000, target_rrn=target)
+    plain = gmres_batched(A, B, reorder="none", **kw)
+    perm = gmres_batched(A, B, reorder="rcm", **kw)
+    for r0, r1 in zip(plain, perm):
+        assert r1.iterations == r0.iterations
+        np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r0.x),
+                                   rtol=1e-9, atol=1e-13)
+    # warm restart from a nonzero x0 maps through the same permutation
+    x0 = 0.9 * plain[0].x
+    w0 = gmres(A, b, x0=x0, reorder="none", **kw)
+    w1 = gmres(A, b, x0=x0, reorder="rcm", **kw)
+    assert w1.iterations == w0.iterations
+    np.testing.assert_allclose(np.asarray(w1.x), np.asarray(w0.x),
+                               rtol=1e-9, atol=1e-13)
+
+
+def test_rcm_jacobi_preconditioner_permutes():
+    """Name-resolved Jacobi builds from the reordered operator; a
+    user-supplied instance is conjugated through permuted() — both must
+    match the unreordered preconditioned solve."""
+    A, target = make_problem("synth:varcoef", 216)
+    b, _ = rhs_for(A)
+    kw = dict(m=30, max_iters=4000, target_rrn=target)
+    r0 = gmres(A, b, precond="jacobi", reorder="none", **kw)
+    r1 = gmres(A, b, precond="jacobi", reorder="rcm", **kw)
+    assert r1.iterations == r0.iterations
+    np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r0.x),
+                               rtol=1e-9, atol=1e-13)
+    pre = JacobiPreconditioner.from_operator(A)
+    r2 = gmres(A, b, precond=pre, reorder="rcm", **kw)
+    assert r2.iterations == r0.iterations
+    np.testing.assert_allclose(np.asarray(r2.x), np.asarray(r0.x),
+                               rtol=1e-9, atol=1e-13)
+    # permuted() really is the conjugation P M^{-1} P^T
+    perm = np.random.default_rng(3).permutation(A.shape[0])
+    v = jnp.asarray(np.random.default_rng(4).standard_normal(A.shape[0]))
+    np.testing.assert_allclose(
+        np.asarray(pre.permuted(perm).apply(v[perm])),
+        np.asarray(pre.apply(v))[perm], rtol=1e-13)
+
+
+# ---------------------------------------------------------------------------
+# planning: auto semantics, caching, validation
+# ---------------------------------------------------------------------------
+
+
+def test_plan_auto_semantics():
+    Au, _ = make_problem("synth:unstructured", 512)
+    As, _ = make_problem("synth:stencil27", 512)
+    # sharded + unstructured: auto adopts RCM and unlocks the halo path
+    p = plan_operator(Au, 8, reorder="auto")
+    assert p.reorder == "rcm" and p.matvec_mode == "halo"
+    assert p.probe.bandwidth < p.raw_bandwidth
+    assert p.perm is not None and p.operator is not Au
+    # raw plan of the same operator: gathered fallback
+    assert plan_operator(Au, 8, reorder="none").matvec_mode == "rows"
+    # unsharded: nothing to unlock, operator untouched
+    p1 = plan_operator(Au, 1, reorder="auto")
+    assert p1.reorder == "none" and p1.operator is Au
+    # already banded: auto leaves it alone
+    assert plan_operator(As, 8, reorder="auto").reorder == "none"
+    # forced modes that cannot benefit skip the permutation too
+    assert plan_operator(Au, 8, reorder="auto",
+                         matvec_mode="rows").reorder == "none"
+
+
+def test_plan_cache_content_hit():
+    """Rebuilding the same problem and solving again reuses the plan (the
+    O(nnz) permute/probe/convert host work) and the compiled solve."""
+    A1, target = make_problem("synth:unstructured", 512)
+    p1 = plan_operator(A1, 8, reorder="rcm")
+    A2, _ = make_problem("synth:unstructured", 512)
+    assert A2 is not A1
+    p2 = plan_operator(A2, 8, reorder="rcm")
+    assert p2 is p1                          # content fingerprint hit
+    assert plan_operator(A1, 4, reorder="rcm") is not p1   # geometry keyed
+
+    b, _ = rhs_for(A1)
+    kw = dict(m=20, max_iters=2000, target_rrn=target, reorder="rcm")
+    r1 = gmres(A1, b, **kw)
+    plans = len(_PLAN_CACHE)
+    solves = len(_SOLVE_CACHE)
+    r2 = gmres(A2, b, **kw)                  # second solve, rebuilt matrix
+    assert len(_PLAN_CACHE) == plans         # no new plan built
+    assert len(_SOLVE_CACHE) == solves       # no retrace either
+    assert r2.iterations == r1.iterations
+    np.testing.assert_array_equal(np.asarray(r1.x), np.asarray(r2.x))
+
+
+def test_auto_declines_unpermutable_preconditioner():
+    """reorder='auto' is a default code path: when the adopted permutation
+    cannot carry the user's preconditioner (a bare callable hook), the
+    sharded driver declines the reorder and solves unpermuted instead of
+    raising — only an explicit reorder='rcm' errors."""
+    from repro.solver.sharded import _plan_and_precond
+
+    A, _ = make_problem("synth:unstructured", 512)
+    hook = lambda x: x  # noqa: E731
+    # auto would adopt RCM here (see test_plan_auto_semantics) but the
+    # hook cannot follow it: declined, solve proceeds on the raw operator
+    plan, pre = _plan_and_precond(A, 8, "auto", "auto", hook)
+    assert plan.reorder == "none" and plan.perm is None
+    assert pre is hook
+    # permutable preconditioners keep the unlock
+    plan, pre = _plan_and_precond(A, 8, "auto", "auto",
+                                  JacobiPreconditioner.from_operator(A))
+    assert plan.reorder == "rcm" and plan.matvec_mode == "halo"
+    assert pre is not None and pre.spec()[0] == "jacobi"
+    # the explicit ask still fails loudly
+    with pytest.raises(ValueError, match="callable preconditioner"):
+        _plan_and_precond(A, 8, "rcm", "auto", hook)
+
+
+def test_reorder_validation():
+    A, _ = make_problem("synth:lung", 64)
+    b = jnp.ones(64)
+    with pytest.raises(ValueError, match="reorder mode"):
+        gmres(A, b, reorder="bogus", m=5, max_iters=5)
+    with pytest.raises(ValueError, match="reorder mode"):
+        plan_operator(A, 2, reorder="bogus")
+    with pytest.raises(ValueError, match="cannot be reordered"):
+        gmres(None, b, matvec=lambda v: v, reorder="rcm", m=5, max_iters=5)
+    with pytest.raises(ValueError, match="callable preconditioner"):
+        gmres(A, b, precond=lambda x: x, reorder="rcm", m=5, max_iters=5)
+
+    class MatvecOnly:
+        shape = (64, 64)
+
+        def matvec(self, x):
+            return x
+
+    with pytest.raises(ValueError, match="sparsity pattern"):
+        plan_operator(MatvecOnly(), 2, reorder="rcm")
+    # auto quietly skips operators that cannot be reordered
+    assert plan_operator(MatvecOnly(), 2,
+                         reorder="auto").matvec_mode == "replicated"
+
+
+def test_make_problem_unknown_name():
+    with pytest.raises(ValueError, match="available problems"):
+        make_problem("synth:nope", 64)
+    with pytest.raises(ValueError, match="synth:unstructured"):
+        make_problem("bogus", 64)
