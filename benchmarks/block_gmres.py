@@ -1,0 +1,195 @@
+"""Block-GMRES vs vmap-GMRES: modelled traffic and wall time per RHS.
+
+The block method's claim is pure bandwidth arithmetic: a block cycle
+streams the operator **once per block step** (one batched SpMV advances
+all ``p`` right-hand sides) and reads each shared basis row once per
+orthogonalization sweep, where the vmap baseline streams both ``p``
+times.  This harness runs both methods on the same RHS batch across
+``p in {1, 2, 4, 8}`` x storage formats {native f64, frsz2_32, frsz2_16}
+and tabulates the modelled bytes per converged RHS:
+
+    total(method) = sum_b op_reads_b * A.nbytes() + sum_b bytes_read_b
+
+Both drivers account ``op_reads`` (modelled full operator passes) and
+``bytes_read`` (basis row traffic) with the same counters, and the block
+results carry 1/p shares of the batch's shared traffic, so the summation
+formula is method-agnostic.  Wall time is the steady-state (second,
+compile-cached) call; on this CPU-emulated setup it is reported for
+orientation, the modelled bytes are the contract.
+
+``--check`` enforces the acceptance criteria at p=8 on the 27-point
+stencil: equal final accuracy (every RHS of both methods converged to
+the problem's calibrated target) and block modelled bytes per RHS at or
+below half the vmap baseline, for both ``float64`` and ``frsz2_32``
+storage.  CI runs ``--quick --check`` as the smoke gate.
+
+Run directly::
+
+    PYTHONPATH=src python -m benchmarks.block_gmres [--quick] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+DEFAULT_PS = (1, 2, 4, 8)
+DEFAULT_FORMATS = ("float64", "frsz2_32", "frsz2_16")
+CHECK_FORMATS = ("float64", "frsz2_32")
+CHECK_RATIO = 0.5
+
+
+def _measure(A, B, *, storage, method, m, max_iters, target_rrn):
+    """One (method, format, p) cell: solve twice, report the warm run."""
+    import numpy as np
+
+    from repro.solver import gmres_batched
+
+    kw = dict(storage=storage, method=method, m=m, max_iters=max_iters,
+              target_rrn=target_rrn)
+
+    def once():
+        t0 = time.perf_counter()
+        res = gmres_batched(A, B, **kw)
+        np.asarray(res[-1].x)  # block until the whole batch is done
+        return res, time.perf_counter() - t0
+
+    _, cold = once()
+    res, wall = once()
+    a_bytes = float(A.nbytes())
+    op_reads = sum(r.op_reads for r in res)
+    basis = sum(r.bytes_read for r in res)
+    return dict(
+        method=method, storage=storage, p=len(res),
+        iterations=[r.iterations for r in res],
+        converged=bool(all(r.converged for r in res)),
+        rrn_max=float(max(r.rrn for r in res)),
+        op_reads=float(op_reads),
+        operator_bytes=float(op_reads * a_bytes),
+        basis_bytes=float(basis),
+        total_bytes=float(op_reads * a_bytes + basis),
+        wall_s=wall, compile_s=max(cold - wall, 0.0),
+    )
+
+
+def run(n: int = 8000, m: int = 30, max_iters: int = 4000,
+        problem: str = "synth:stencil27", ps=DEFAULT_PS,
+        formats=DEFAULT_FORMATS, check: bool = False,
+        json_path: str | None = None):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.sparse import make_problem
+
+    A, target = make_problem(problem, n)
+    n = A.shape[0]
+    rng = np.random.default_rng(0)
+    B_full = rng.standard_normal((max(ps), n))
+    B_full /= np.linalg.norm(B_full, axis=1, keepdims=True)
+
+    print(f"{problem} n={n} m={m} target_rrn={target:.1e} "
+          f"A bytes/pass={A.nbytes():.3e}")
+    print(f"{'fmt':10s} {'p':>2s} {'method':6s} {'iters':>18s} "
+          f"{'opB/rhs':>10s} {'basB/rhs':>10s} {'totB/rhs':>10s} "
+          f"{'ratio':>6s} {'wall_s':>7s}  conv")
+    rows = []
+    failures = []
+    for fmt in formats:
+        for p in ps:
+            B = B_full[:p]
+            base = None
+            for method in ("vmap", "block"):
+                cell = _measure(A, B, storage=fmt, method=method, m=m,
+                                max_iters=max_iters, target_rrn=target)
+                cell.update(problem=problem, n=n, m=m)
+                per_rhs = cell["total_bytes"] / p
+                if method == "vmap":
+                    base = cell
+                    ratio = 1.0
+                else:
+                    ratio = per_rhs / (base["total_bytes"] / p)
+                cell["bytes_per_rhs"] = per_rhs
+                cell["ratio_vs_vmap"] = ratio
+                rows.append(cell)
+                its = ",".join(str(i) for i in cell["iterations"])
+                print(f"{fmt:10s} {p:2d} {method:6s} {its:>18s} "
+                      f"{cell['operator_bytes'] / p:10.3e} "
+                      f"{cell['basis_bytes'] / p:10.3e} {per_rhs:10.3e} "
+                      f"{ratio:6.3f} {cell['wall_s']:7.3f}  "
+                      f"{cell['converged']}")
+                if (check and method == "block" and p == max(ps)
+                        and fmt in CHECK_FORMATS):
+                    if not (cell["converged"] and base["converged"]):
+                        failures.append(
+                            f"{fmt} p={p}: not all RHS converged "
+                            f"(block={cell['converged']}, "
+                            f"vmap={base['converged']})")
+                    elif ratio > CHECK_RATIO:
+                        failures.append(
+                            f"{fmt} p={p}: block/vmap modelled bytes per "
+                            f"RHS {ratio:.3f} > {CHECK_RATIO}")
+    if json_path:
+        snap = dict(problem=problem, n=n, m=m, max_iters=max_iters,
+                    target_rrn=target, rows=rows)
+        with open(json_path, "w") as f:
+            json.dump(snap, f, indent=1)
+        print(f"\nwrote {json_path} ({len(rows)} rows)")
+    if check and failures:
+        print("\nCHECK FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        raise SystemExit(1)
+    if check:
+        print(f"\nCHECK OK: p={max(ps)} block bytes/RHS <= "
+              f"{CHECK_RATIO} x vmap for {CHECK_FORMATS} at equal "
+              "final accuracy")
+    return rows
+
+
+def snapshot(json_path: str, problems=("synth:stencil27", "synth:aniso2d"),
+             n: int = 2000, m: int = 30, max_iters: int = 4000,
+             ps=DEFAULT_PS, formats=DEFAULT_FORMATS):
+    """Write the committed ``BENCH_gmres.json`` snapshot: one row per
+    (problem, format, p, method) with iterations, modelled bytes, wall
+    time, and the block-vs-vmap ratio.  Regenerated by
+    ``python -m benchmarks.run --only block_gmres``."""
+    rows = []
+    for problem in problems:
+        rows += run(n=n, m=m, max_iters=max_iters, problem=problem,
+                    ps=ps, formats=formats)
+    snap = dict(suite="block_gmres", n=n, m=m, max_iters=max_iters,
+                rows=rows)
+    with open(json_path, "w") as f:
+        json.dump(snap, f, indent=1)
+    print(f"\nwrote {json_path} ({len(rows)} rows)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problem (n~2000)")
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--m", type=int, default=30)
+    ap.add_argument("--max-iters", type=int, default=4000)
+    ap.add_argument("--problem", default="synth:stencil27")
+    ap.add_argument("--ps", default=",".join(map(str, DEFAULT_PS)))
+    ap.add_argument("--formats", default=",".join(DEFAULT_FORMATS))
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless block bytes/RHS <= "
+                         f"{CHECK_RATIO} x vmap at the largest p for "
+                         f"{CHECK_FORMATS}, all RHS converged")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    run(n=2000 if args.quick else args.n, m=args.m,
+        max_iters=args.max_iters, problem=args.problem,
+        ps=tuple(int(p) for p in args.ps.split(",")),
+        formats=tuple(args.formats.split(",")), check=args.check,
+        json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

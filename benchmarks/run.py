@@ -12,6 +12,11 @@
 | CB-GMRES accuracy hedge       | benchmarks.mixed_sweep        |
 | LM cells roofline (§Roofline) | benchmarks.lm_roofline        |
 | sharded-solve wire bytes      | benchmarks.shard_wire         |
+| block vs vmap multi-RHS       | benchmarks.block_gmres        |
+
+``block_gmres`` also refreshes the committed ``BENCH_gmres.json``
+snapshot (per-problem iterations, modelled bytes, wall time, and the
+block-vs-vmap traffic ratio).
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ def main(argv=None):
 
     from benchmarks import (
         accessor_roofline,
+        block_gmres,
         convergence_curves,
         iteration_table,
         lm_roofline,
@@ -57,6 +63,9 @@ def main(argv=None):
         "shard_wire": lambda: shard_wire.run(
             n=512 if args.quick else 2048,
             max_iters=1000 if args.quick else 4000),
+        # refreshes the committed snapshot of block-vs-vmap traffic
+        "block_gmres": lambda: block_gmres.snapshot(
+            "BENCH_gmres.json", n=1000 if args.quick else 2000),
     }
     failed = []
     for name, fn in suites.items():

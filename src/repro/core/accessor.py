@@ -55,6 +55,8 @@ __all__ = [
     "MixedFormat",
     "ShardedFormat",
     "BasisAccessor",
+    "BlockBasisAccessor",
+    "auto_mixed_head",
     "register_format",
     "format_by_name",
     "FORMATS",
@@ -128,6 +130,17 @@ class StorageFormat:
         """h = V @ w (unmasked)."""
         V = self.read_all(store, arith_dtype, n)
         return V @ w.astype(arith_dtype)
+
+    def reduce_partials(self, x):
+        """Reduce a locally-computed contraction against the basis.
+
+        Identity for local formats.  :class:`ShardedFormat` overrides this
+        with a psum over its mesh axis (on the transport its ``dots``
+        already uses), so accessor-level contractions that cannot route
+        through ``dots`` — the block-basis ``V^T W`` products — still
+        defer the wire decision to the format.
+        """
+        return x
 
     def combine(self, store, h, arith_dtype, n: int):
         """y = h @ V (unmasked)."""
@@ -410,11 +423,14 @@ class ShardedFormat(StorageFormat):
 
     def dots(self, store, w, arith_dtype, n: int):
         local = self.inner.dots(store, w, arith_dtype, n)
+        return self.reduce_partials(local).astype(arith_dtype)
+
+    def reduce_partials(self, x):
         if self.compressed_transport:
             from repro.dist.collectives import compressed_psum
 
-            return compressed_psum(local, self.axis_name).astype(arith_dtype)
-        return jax.lax.psum(local, self.axis_name)
+            return compressed_psum(x, self.axis_name)
+        return jax.lax.psum(x, self.axis_name)
 
     def combine(self, store, h, arith_dtype, n: int):
         return self.inner.combine(store, h, arith_dtype, n)
@@ -477,6 +493,82 @@ class BasisAccessor:
         return self.fmt.nbytes(self.m, self.n)
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockBasisAccessor:
+    """Fixed-capacity basis of *block vectors* ``V (m, p, n)`` — the shared
+    Krylov buffer of block-GMRES, stored through the unchanged
+    :class:`StorageFormat` protocol.
+
+    Each block row (the ``p`` simultaneous Krylov directions of one Arnoldi
+    step) is flattened to a single length ``p*n`` storage row, so every
+    registered format — native dtypes, FRSZ2, mixed head/tail, sharded
+    wrappers — holds block bases without modification (FRSZ2 blocks may
+    straddle column boundaries inside a row; the codec is
+    position-agnostic, only the per-block max scale shifts).  ``nbytes``
+    therefore prices the *shared* basis once, which is exactly the traffic
+    amortization block-GMRES buys: one stored row serves all ``p``
+    right-hand sides.
+
+    The two hot contractions generalize the accessor's ``dots``/``combine``:
+
+      * ``block_dots(store, W)``   — ``H[i,a,b] = <V[i,a], W[b]>``, one
+        einsum over the whole basis instead of ``p`` row-dot sweeps;
+      * ``block_combine(store, Y)`` — ``out[b] = sum_{i,a} Y[i,a,b] V[i,a]``.
+
+    Sharded stores hold the local ``(p, n_local)`` chunk of each block row
+    flattened locally; contractions reduce through the format's
+    ``reduce_partials`` hook, keeping the wire transport decision with the
+    format (as for scalar ``dots``).
+    """
+
+    fmt: Any
+    m: int                      # block-row capacity (solver passes m+1)
+    p: int                      # block width = number of right-hand sides
+    n: int                      # vector length (local chunk when sharded)
+    arith_dtype: Any = jnp.float64
+
+    @property
+    def n_flat(self) -> int:
+        return self.p * self.n
+
+    def empty(self):
+        return self.fmt.empty(self.m, self.n_flat)
+
+    def write_block(self, store, j, W):
+        """Store block row j from ``W (p, n)`` (compress)."""
+        return self.fmt.write_row(store, j, W.reshape(self.n_flat))
+
+    def read_block(self, store, j):
+        """Decompress block row j back to ``(p, n)``."""
+        v = self.fmt.read_row(store, j, self.arith_dtype, self.n_flat)
+        return v.reshape(self.p, self.n)
+
+    def read_all_blocks(self, store):
+        V = self.fmt.read_all(store, self.arith_dtype, self.n_flat)
+        return V.reshape(self.m, self.p, self.n)
+
+    # -- hot loops ------------------------------------------------------------
+    def block_dots(self, store, W, row_mask=None):
+        """``H[i, a, b] = <V[i, a], W[b]>`` with masked block rows zeroed."""
+        V = self.read_all_blocks(store)
+        H = jnp.einsum("ian,bn->iab", V, W.astype(self.arith_dtype))
+        H = self.fmt.reduce_partials(H).astype(self.arith_dtype)
+        if row_mask is not None:
+            H = jnp.where(row_mask[:, None, None], H, 0.0)
+        return H
+
+    def block_combine(self, store, Y, row_mask=None):
+        """``out[b] = sum_{i,a} Y[i, a, b] V[i, a]`` (local chunk when
+        sharded — no collective, mirroring scalar ``combine``)."""
+        if row_mask is not None:
+            Y = jnp.where(row_mask[:, None, None], Y, 0.0)
+        V = self.read_all_blocks(store)
+        return jnp.einsum("iab,ian->bn", Y.astype(self.arith_dtype), V)
+
+    def nbytes(self) -> int:
+        return self.fmt.nbytes(self.m, self.n_flat)
+
+
 # ---------------------------------------------------------------------------
 # Registry (benchmarks / CLI select formats by name)
 # ---------------------------------------------------------------------------
@@ -525,17 +617,58 @@ def _build_frsz2(name, *, arith_dtype=jnp.float64, bs=32, use_kernels=False,
     return FrszFormat(spec=spec, use_kernels=use_kernels)
 
 
+def auto_mixed_head(tail_eps: float, target_rrn: float | None = None,
+                    m: int | None = None) -> int:
+    """Head size ``k`` for ``mixed:auto:<tail>`` from the solve's target.
+
+    Inexact-Krylov coefficient-decay model: in the deciding restart cycle
+    the least-squares coefficient of basis row ``j`` shrinks roughly
+    geometrically from ``O(1)`` to ``O(target)`` over the ``m`` slots,
+    ``c_j ~ target^(j/m)``.  Row ``j``'s storage error perturbs the
+    correction by ``~c_j * eps_tail``, so the tail format is admissible
+    once ``c_j * eps_tail <= 0.5 * target`` — the head must cover the rows
+    before that, i.e. ``k = ceil(m * log(0.5*target/eps_tail)/log(target))``
+    (clamped to ``[0, m]``; ``k = 0`` when the tail is already accurate
+    enough for every row).  The same safety factor and epsilon contract as
+    :meth:`repro.solver.pipeline.AdaptivePolicy.from_target` — the last
+    hand-tuned head constant now derives from the target like the adaptive
+    thresholds do.
+
+    ``target_rrn``/``m`` are threaded through ``format_by_name`` by the
+    solvers; direct registry lookups without them fall back to a 1e-12
+    target over an m=100 basis (documented, deterministic).
+    """
+    import math
+
+    tgt = 1e-12 if target_rrn is None else float(target_rrn)
+    cap = 100 if m is None else int(m)
+    if cap <= 0:
+        return 0
+    tgt = min(max(tgt, 1e-300), 0.5)      # log(tgt) < 0 needed below
+    if float(tail_eps) <= 0.5 * tgt:
+        return 0
+    frac = math.log(0.5 * tgt / float(tail_eps)) / math.log(tgt)
+    return max(0, min(cap, math.ceil(cap * min(frac, 1.0))))
+
+
 @register_format("mixed")
-def _build_mixed(name, *, arith_dtype=jnp.float64, **ctx):
-    # "mixed" | "mixed:<k>" | "mixed:<k>:<tail-format-name>"
+def _build_mixed(name, *, arith_dtype=jnp.float64, target_rrn=None, m=None,
+                 **ctx):
+    # "mixed" | "mixed:<k>" | "mixed:auto" | "mixed:<k|auto>:<tail-name>"
     parts = name.split(":", 2)
-    if len(parts) > 1 and parts[1] and not parts[1].isdigit():
+    head_spec = parts[1] if len(parts) > 1 and parts[1] else "2"
+    if head_spec != "auto" and not head_spec.isdigit():
         raise ValueError(
             f"malformed mixed format name {name!r}: the head size must be "
-            "an integer ('mixed:<k>[:<tail>]', e.g. 'mixed:2:frsz2_32')")
-    k = int(parts[1]) if len(parts) > 1 and parts[1] else 2
+            "an integer or 'auto' ('mixed:<k|auto>[:<tail>]', e.g. "
+            "'mixed:2:frsz2_32', 'mixed:auto:frsz2_16')")
     tail_name = parts[2] if len(parts) > 2 else "frsz2_32"
-    tail = format_by_name(tail_name, arith_dtype=arith_dtype, **ctx)
+    tail = format_by_name(tail_name, arith_dtype=arith_dtype,
+                          target_rrn=target_rrn, m=m, **ctx)
+    if head_spec == "auto":
+        k = auto_mixed_head(tail.eps(), target_rrn, m)
+    else:
+        k = int(head_spec)
     return MixedFormat(k=k, head=NativeFormat(arith_dtype), tail=tail)
 
 
@@ -564,14 +697,17 @@ def _build_emul(name, **ctx):
 
 
 def format_by_name(name: str, *, arith_dtype=jnp.float64, bs: int = 32,
-                   use_kernels: bool = False, rounding: str = "truncate"):
+                   use_kernels: bool = False, rounding: str = "truncate",
+                   target_rrn: float | None = None, m: int | None = None):
     """Resolve a storage format from the :data:`FORMATS` table.
 
     Exact names first ('float64', …), then family prefixes: 'frsz2_XX',
-    'mixed[:k[:tail]]', 'emul:…'.
+    'mixed[:k|auto[:tail]]', 'emul:…'.  ``target_rrn``/``m`` are solve
+    context for self-sizing formats (``mixed:auto`` derives its head size
+    from them); the solvers thread their arguments through automatically.
     """
     ctx = dict(arith_dtype=arith_dtype, bs=bs, use_kernels=use_kernels,
-               rounding=rounding)
+               rounding=rounding, target_rrn=target_rrn, m=m)
     if name in FORMATS:
         return FORMATS[name](name, **ctx)
     for sep in (":", "_"):

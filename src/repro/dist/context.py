@@ -48,14 +48,13 @@ class DistContext:
         return self.axis_name is not None
 
     def sum(self, x):
-        """Global sum of an already locally-reduced value."""
+        """Global sum of an already locally-reduced value (any shape)."""
         if self.axis_name is None:
             return x
         if self.compressed_norms:
             from repro.dist.collectives import compressed_psum
 
-            return compressed_psum(jnp.reshape(x, (1,)),
-                                   self.axis_name)[0].astype(x.dtype)
+            return compressed_psum(x, self.axis_name).astype(x.dtype)
         return jax.lax.psum(x, self.axis_name)
 
     def norm(self, x):
@@ -63,6 +62,18 @@ class DistContext:
         if self.axis_name is None:
             return jnp.linalg.norm(x)
         return jnp.sqrt(self.sum(jnp.sum(jnp.square(x))))
+
+    def col_norms(self, X):
+        """Per-column norms of a block ``X (p, n)`` of row-stacked
+        (possibly row-partitioned) vectors: ``||X[b]||`` for each b.
+
+        The block-GMRES analogue of :meth:`norm` — one reduction of ``p``
+        partial squares instead of ``p`` scalar reductions.
+        """
+        sq = jnp.sum(jnp.square(X), axis=-1)
+        if self.axis_name is None:
+            return jnp.sqrt(sq)
+        return jnp.sqrt(self.sum(sq))
 
     def spec(self):
         """Hashable identity for the compiled-solve cache."""

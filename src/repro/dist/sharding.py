@@ -32,6 +32,7 @@ __all__ = [
     "cache_shardings",
     "basis_partition_specs",
     "basis_shardings",
+    "block_driver_partition_specs",
     "driver_partition_specs",
     "vector_partition_spec",
 ]
@@ -235,12 +236,48 @@ def driver_partition_specs(accs, axis: str = "basis", batched: bool = False):
         stores=store_specs,
         total=P(), cycles=P(), restarts=P(), converged=P(),
         stagnated=P(), rrn=P(), prev_last=P(), nbytes=P(),
-        hist=P(), rst=P(),
+        op_reads=P(), hist=P(), rst=P(),
     )
     if batched:
         specs = jax.tree.map(lambda p: P(None, *tuple(p)), specs,
                              is_leaf=lambda x: isinstance(x, P))
     return specs
+
+
+def block_driver_partition_specs(accs, axis: str = "basis"):
+    """PartitionSpec tree for the *block* device driver's state dict.
+
+    The block driver (``repro.solver.block._block_device_solve_fn``) keeps
+    one shared basis of block vectors; its state differs from the scalar
+    driver's in shape, not in sharding intent:
+
+      * ``x`` — the ``(p, n)`` solution block: RHS rows replicated, vector
+        dim row-partitioned over ``axis`` (same composition as
+        :func:`vector_partition_spec` with ``batched=True``);
+      * ``stores`` — block rows are flattened to one ``p * n_local`` row
+        per Krylov index, so :func:`basis_partition_specs` applies
+        unchanged (each accessor's ``empty()`` already builds the local
+        chunk);
+      * everything else — per-column ``(p,)`` stats (``total``,
+        ``converged``, ``rrn``), scalars (``blocks``, ``cycles``,
+        ``restarts``, ``stagnated``, ``prev_last``, ``nbytes``,
+        ``op_reads``) and the ``(steps, p)`` histories — replicated.
+
+    Unlike the scalar driver there is no ``batched`` flag: the block axis
+    *is* the batch, carried inside each state leaf rather than by an outer
+    ``vmap``.  One halo exchange per block matvec serves all ``p`` RHS.
+    """
+    store_specs = tuple(
+        basis_partition_specs(jax.eval_shape(acc.empty), axis)
+        for acc in accs
+    )
+    return dict(
+        x=P(None, axis),
+        stores=store_specs,
+        total=P(), blocks=P(), cycles=P(), restarts=P(), converged=P(),
+        stagnated=P(), rrn=P(), prev_last=P(), nbytes=P(),
+        op_reads=P(), hist=P(), rst=P(),
+    )
 
 
 def basis_shardings(store, mesh, axis: str = "basis"):

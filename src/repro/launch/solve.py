@@ -10,7 +10,10 @@ host`` is the seed python-looped driver for overhead comparison.
 ``--batch k`` solves ``k`` right-hand sides per format through
 ``gmres_batched`` (vmap over the device-resident driver) and reports
 per-format wall time both total and per solve — the scenario layer for
-serving many simultaneous systems.
+serving many simultaneous systems.  ``--method block`` switches the
+batched solve to block-GMRES (one shared Krylov basis for the whole
+batch — ``repro.solver.block``); the README's decision table says when
+that wins.
 
 Pipeline flags (see ``repro.solver.pipeline``):
 
@@ -60,6 +63,7 @@ def _batch_rhs(A, b, k: int):
 def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                 max_iters: int = 20000, target_rrn: float | None = None,
                 driver: str = "device", batch: int = 1,
+                method: str = "vmap",
                 precond: str | None = None, ortho: str = "mgs",
                 policy: str | None = None, shard: int | None = None,
                 shard_transport: str = "plain", shard_matvec: str = "auto",
@@ -82,7 +86,7 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
         t0 = time.time()
         if batch > 1:
             B = _batch_rhs(A, b, batch)
-            results = gmres_batched(A, B, **kw)
+            results = gmres_batched(A, B, method=method, **kw)
             res = results[0]               # reference rhs: accuracy metrics
             iters = sum(r.iterations for r in results)
             conv = all(r.converged for r in results)
@@ -97,7 +101,8 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                     / jnp.linalg.norm(x_sol))
         rows.append(dict(problem=problem, n=A.shape[0], format=run["label"],
                          driver=driver if batch == 1 else "device",
-                         batch=batch, precond=precond or "identity",
+                         batch=batch, method=method if batch > 1 else None,
+                         precond=precond or "identity",
                          ortho=ortho, shard=shard or 1,
                          shard_transport=shard_transport if shard else None,
                          shard_matvec=shard_matvec if shard else None,
@@ -128,6 +133,10 @@ def main(argv=None):
     ap.add_argument("--driver", choices=["device", "host"], default="device")
     ap.add_argument("--batch", type=int, default=1,
                     help="solve this many RHS per format (vmap batch)")
+    ap.add_argument("--method", choices=["vmap", "block"], default="vmap",
+                    help="batched solve method: independent per-RHS solves "
+                         "(vmap) or one shared Krylov basis for the whole "
+                         "batch (block) — only meaningful with --batch > 1")
     ap.add_argument("--precond", default=None,
                     help="right preconditioner: jacobi (default: none)")
     ap.add_argument("--ortho", choices=["mgs", "cgs2"], default="mgs",
@@ -160,6 +169,7 @@ def main(argv=None):
     rows = solve_suite(args.problem, args.n, args.formats.split(","),
                        m=args.m, target_rrn=args.target_rrn,
                        driver=args.driver, batch=args.batch,
+                       method=args.method,
                        precond=args.precond, ortho=args.ortho,
                        policy=args.policy, shard=args.shard,
                        shard_transport=args.shard_transport,

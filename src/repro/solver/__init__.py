@@ -1,7 +1,11 @@
 """GMRES(m) / CB-GMRES with Accessor-backed compressed Krylov basis."""
+from repro.solver.block import gmres_block
 from repro.solver.gmres import GmresResult, cb_gmres, gmres, gmres_batched
 from repro.solver.pipeline import (
     AdaptivePolicy,
+    BlockCGS2Orthogonalizer,
+    BlockMGSOrthogonalizer,
+    BlockOrthogonalizer,
     CGS2Orthogonalizer,
     CallablePreconditioner,
     IdentityPreconditioner,
@@ -11,6 +15,8 @@ from repro.solver.pipeline import (
     PrecisionPolicy,
     Preconditioner,
     StaticPolicy,
+    block_orthogonalizer_by_name,
+    block_qr,
     orthogonalizer_by_name,
     policy_by_name,
 )

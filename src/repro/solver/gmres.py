@@ -103,6 +103,10 @@ class GmresResult:
     bytes_read: float = 0.0      # modelled basis read traffic (bytes)
     stagnated: bool = False      # stopped by the stagnation guard, not
                                  # convergence or the iteration budget
+    op_reads: float = 0.0        # modelled full passes over the operator
+                                 # (Arnoldi matvecs + explicit residuals);
+                                 # block results carry their 1/p share of
+                                 # the batch's shared passes
 
 
 def _givens(a, b):
@@ -231,6 +235,136 @@ def _cycle_row_reads(j_stop, passes: int, extra_rows=0):
 
 
 # ---------------------------------------------------------------------------
+# Block Hessenberg least squares (block-GMRES, see repro.solver.block)
+# ---------------------------------------------------------------------------
+#
+# With blocks of p coupled right-hand sides the stacked Hessenberg
+# ``Hbar ((m+1)p, mp)`` is *banded* upper Hessenberg: column ``c`` has
+# exactly p subdiagonal entries (rows c+1..c+p — the H block of its step
+# plus the upper-triangular QR factor T of the new block).  The least
+# squares ``min ||G - Hbar Y||`` therefore still reduces by Givens
+# rotations, p per column instead of one, each pairing the subdiagonal
+# entry *directly with the pivot row* ``(c, c+k)``, k = p..1.
+#
+# Pivot pairing (rather than the textbook adjacent-pair chain) is what
+# makes deflation safe: a deflated basis direction is a zero vector, so
+# its Hessenberg row and column are identically zero, and a rotation
+# whose non-pivot entry is zero is the identity — dead rows never absorb
+# entries or rhs mass, the live sub-system reduces exactly as scalar
+# GMRES would, and the implicit per-column residual estimate stays exact.
+# (An adjacent chain instead *swaps* live entries up into dead pivot
+# slots, stranding rhs mass where no column can reduce it.)
+#
+# Rotations are stored per column as ``cs/sn (mp, p)`` — entry ``[c, k]``
+# acts on rows ``(c, c+p-k)``, applied in k order — and initialized to
+# the identity (cs=1, sn=0) so replaying them over a traced column range
+# needs no masking.
+
+
+def _block_apply_prior(slab, cs, sn, jp, p: int):
+    """Apply all stored rotations of columns ``< jp`` to a new column slab.
+
+    ``slab ((m+1)p, q)`` is the stacked Hessenberg column block of the
+    current step.  Column ``c``'s rotations only touch rows ``c..c+p``, so
+    each replay is a ``(p+1)``-row window at a dynamic offset; the loop
+    bound ``jp`` is traced (fori_loop lowers to while_loop).
+    """
+    q = slab.shape[1]
+
+    def apply_col(c, slab):
+        wnd = jax.lax.dynamic_slice(slab, (c, 0), (p + 1, q))
+        for k in range(p):
+            r1 = p - k                   # rotation k pairs rows (c, c+p-k)
+            a, b = wnd[0], wnd[r1]
+            cc, ss = cs[c, k], sn[c, k]
+            wnd = wnd.at[0].set(cc * a + ss * b)
+            wnd = wnd.at[r1].set(-ss * a + cc * b)
+        return jax.lax.dynamic_update_slice(slab, wnd, (c, 0))
+
+    return jax.lax.fori_loop(0, jp, apply_col, slab)
+
+
+def _block_triangularize(slab, G, jp, p: int):
+    """Annihilate the subdiagonal band of the step's new columns.
+
+    After :func:`_block_apply_prior`, rows ``jp..jp+2p-1`` of the slab
+    hold the still-unreduced window (prior rotations never reach below row
+    ``jp+p``).  Local column ``k`` has subdiagonal entries in window rows
+    ``k+1..k+p``; each is killed by a rotation pairing it directly with
+    the pivot row ``k`` (see the banner comment — this keeps deflated
+    rows identically zero), applied to the remaining slab columns and to
+    the rotated rhs ``G``.
+
+    Returns ``(slab, G, csn, snn, gtail)``: the new rotations ``(p, p)``
+    in the storage layout of :func:`_block_apply_prior` (``[k, p-i]``
+    acts on window rows ``(k, k+i)``), and ``gtail = G[jp+p : jp+2p]`` —
+    the unreduced rhs rows whose per-column norms are the implicit
+    residual estimates of this step (the block analogue of ``|g_{j+1}|``;
+    rhs mass only ever moves down within a pivot's band, so the p-row
+    tail holds all of it).  Deflated (all-zero) columns produce identity
+    rotations via the zero-safe :func:`_givens`, so the band reduction is
+    breakdown-free.
+    """
+    q = slab.shape[1]
+    W = jax.lax.dynamic_slice(slab, (jp, 0), (2 * p, q))
+    G2 = jax.lax.dynamic_slice(G, (jp, 0), (2 * p, G.shape[1]))
+    csn = jnp.ones((p, p), slab.dtype)
+    snn = jnp.zeros((p, p), slab.dtype)
+    for k in range(p):
+        for i in range(p, 0, -1):
+            r1 = k + i
+            c, s = _givens(W[k, k], W[r1, k])
+            a, b = W[k], W[r1]
+            W = W.at[k].set(c * a + s * b)
+            W = W.at[r1].set(-s * a + c * b)
+            ga, gb = G2[k], G2[r1]
+            G2 = G2.at[k].set(c * ga + s * gb)
+            G2 = G2.at[r1].set(-s * ga + c * gb)
+            csn = csn.at[k, p - i].set(c)
+            snn = snn.at[k, p - i].set(s)
+        W = W.at[k + 1:, k].set(0.0)     # exact zeros below the diagonal
+    slab = jax.lax.dynamic_update_slice(slab, W, (jp, 0))
+    G = jax.lax.dynamic_update_slice(G, G2, (jp, 0))
+    return slab, G, csn, snn, G2[p:]
+
+
+def _block_solve_and_update(acc, store, R, G, j_stop, X0, precond):
+    """Block least squares: ``Y = argmin ||G - R Y||`` truncated at
+    ``j_stop`` block columns, then ``X = X0 + M^{-1} (V Y)``.
+
+    ``R ((m+1)p, mp)`` is the rotated (upper-triangular) stacked
+    Hessenberg, ``G ((m+1)p, p)`` the rotated rhs.  Deflated directions
+    show up as exactly-zero diagonal entries (their whole column is zero:
+    a zero basis vector propagates zero inner products); they are excluded
+    from the back substitution (zero coefficient), which is precisely the
+    minimization over the deflated subspace.
+    """
+    mb = acc.m - 1
+    p = acc.p
+    mp = mb * p
+    ad = acc.arith_dtype
+    idx = jnp.arange(mp)
+    active = idx < j_stop * p
+    Rm = jnp.where(active[None, :] & active[:, None], R[:mp, :mp], 0.0)
+    diag_ok = jnp.abs(jnp.diagonal(Rm)) > _TINY
+    solved = active & diag_ok
+    eye = jnp.eye(mp, dtype=bool)
+    Rm = Rm + jnp.where(eye & ~solved[:, None], 1.0, 0.0)
+    Gm = jnp.where(active[:, None], G[:mp], 0.0)
+
+    def back(i, Y):
+        jj = mp - 1 - i
+        s = Gm[jj] - Rm[jj] @ Y
+        yi = s / Rm[jj, jj]
+        return Y.at[jj].set(jnp.where(solved[jj], yi, 0.0))
+
+    Y = jax.lax.fori_loop(0, mp, back, jnp.zeros((mp, p), ad))
+    Ypad = jnp.concatenate([Y.reshape(mb, p, p), jnp.zeros((1, p, p), ad)])
+    dX = acc.block_combine(store, Ypad, jnp.arange(mb + 1) < j_stop)
+    return X0 + jax.vmap(precond.apply)(dX)
+
+
+# ---------------------------------------------------------------------------
 # Shared setup
 # ---------------------------------------------------------------------------
 
@@ -245,7 +379,7 @@ def _resolve(A, b, storage, policy, m, arith_dtype, matvec, precond, ortho,
             matvec = partial(A.matvec, row_ids=row_ids)
         else:
             matvec = A.matvec
-    policy = resolve_policy(policy, storage, arith_dtype, target_rrn)
+    policy = resolve_policy(policy, storage, arith_dtype, target_rrn, m)
     n = b.shape[0]
     accs = tuple(
         BasisAccessor(fmt=f, m=m + 1, n=n, arith_dtype=arith_dtype)
@@ -333,6 +467,11 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
     converged = False
     stagnated = False
     bytes_read = 0.0
+    # operator passes: 1.0 up front for parity with the device driver's
+    # eager rrn0 (the host computes that residual lazily, but both drivers
+    # model the same work); +1 per loop-head residual; +j_stop modelled
+    # Arnoldi matvecs and +1 explicit post-update residual per cycle.
+    op_reads = 1.0
     # rrn is (re)established at each loop head from the explicit restart
     # residual (the seed's extra up-front matvec was redundant); the
     # fallback below only runs for a zero iteration budget, keeping parity
@@ -343,6 +482,7 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
         r = b - matvec(x).astype(arith_dtype)
         beta = jnp.linalg.norm(r)
         restart_rrns.append(float(beta / b_norm))
+        op_reads += 1.0
         rrn = restart_rrns[-1]
         if rrn <= target_rrn:
             converged = True
@@ -364,6 +504,7 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
         bytes_read += _cycle_row_reads(j_stop, ortho.passes,
                                        int(extra_rows)) * (
             accs[lvl].nbytes() / accs[lvl].m)
+        op_reads += float(j_stop) + 1.0
         rrn = float(jnp.linalg.norm(b - matvec(x).astype(arith_dtype)) / b_norm)
         if rrn <= target_rrn:
             converged = True
@@ -392,6 +533,7 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
         restarts=len(restart_rrns),
         bytes_read=bytes_read,
         stagnated=stagnated,
+        op_reads=op_reads,
     )
 
 
@@ -450,6 +592,7 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
             rrn=rrn0,
             prev_last=jnp.asarray(jnp.inf, ad),
             nbytes=jnp.asarray(0.0, ad),
+            op_reads=jnp.asarray(1.0, ad),     # the rrn0 residual above
             hist=jnp.zeros((hist_cap,), ad),
             rst=jnp.zeros((rst_cap,), ad),
         )
@@ -463,6 +606,7 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
             rr = beta / b_norm
             rst = s["rst"].at[s["restarts"]].set(rr, mode="drop")
             restarts = s["restarts"] + 1
+            op_head = s["op_reads"] + 1.0   # the loop-head residual above
             early = rr <= target_rrn        # restart residual already there
             lvl = policy.level(rr, s["cycles"])
 
@@ -501,11 +645,12 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
                         store if i == k else s["stores"][i]
                         for i in range(n_levels)
                     )
+                    op_reads = op_head + j_stop.astype(ad) + 1.0
                     return dict(
                         x=x, stores=stores, total=total, cycles=cycles,
                         restarts=restarts, converged=conv, stagnated=stag,
-                        rrn=rrn, prev_last=last, nbytes=nbytes, hist=hist,
-                        rst=rst,
+                        rrn=rrn, prev_last=last, nbytes=nbytes,
+                        op_reads=op_reads, hist=hist, rst=rst,
                     )
                 return run
 
@@ -518,7 +663,7 @@ def _device_solve_fn(matvec, accs, policy, m: int, max_iters: int,
             def skip_cycle(s):
                 return dict(
                     s, restarts=restarts, converged=jnp.asarray(True),
-                    rrn=rr, rst=rst,
+                    rrn=rr, rst=rst, op_reads=op_head,
                 )
 
             return jax.lax.cond(early, skip_cycle, run_cycle, s)
@@ -542,6 +687,7 @@ def _device_result(state) -> GmresResult:
         restarts=restarts,
         bytes_read=float(state["nbytes"]),
         stagnated=bool(state["stagnated"]),
+        op_reads=float(state["op_reads"]),
     )
 
 
@@ -749,6 +895,8 @@ def gmres_batched(
     arith_dtype: Any = None,
     eta: float = 0.7071067811865475,
     matvec: Callable | None = None,
+    method: str = "vmap",
+    driver: str = "device",
     shard: int | None = None,
     shard_transport: str = "plain",
     shard_matvec: str = "auto",
@@ -756,20 +904,43 @@ def gmres_batched(
 ) -> list[GmresResult]:
     """Solve A X[i] = B[i] for a batch of right-hand sides ``B (k, n)``.
 
-    vmaps the device-resident driver: one XLA program advances all systems
-    together (the while_loop runs until every system has converged or hit
-    its iteration budget; finished systems are masked by the batching rule).
-    The full pipeline (``policy``/``precond``/``ortho``) is supported.
-    Returns one :class:`GmresResult` per right-hand side.
+    ``method`` selects the batching strategy:
+
+    * ``"vmap"`` (default) — p *independent* Krylov spaces: vmaps the
+      device-resident driver, one XLA program advances all systems
+      together (the while_loop runs until every system has converged or
+      hit its iteration budget; finished systems are masked by the
+      batching rule).  Operator and basis are read once **per RHS** per
+      sweep.
+    * ``"block"`` — one *shared* block-Krylov space
+      (:func:`repro.solver.block.gmres_block`): each basis row is a block
+      of p coupled vectors, so every Arnoldi sweep reads the operator and
+      the shared basis **once for the whole batch** — the bandwidth
+      amortization measured by ``benchmarks/block_gmres.py``.  Converged
+      or linearly-dependent right-hand sides are deflated at restarts.
+
+    The full pipeline (``policy``/``precond``/``ortho``) is supported by
+    both methods.  Returns one :class:`GmresResult` per right-hand side.
+    ``driver`` is ``"device"`` (one jitted while_loop) or ``"host"`` (the
+    python-looped parity oracle) for either method.
 
     ``shard`` composes multi-device row partitioning with the batch: the
-    solve runs as ``shard_map`` over the vector dim with the ``vmap`` over
-    right-hand sides *inside* — one XLA program, ``k`` systems, ``shard``
-    devices (multi-device multi-RHS serving).  See :func:`gmres`.
+    solve runs as ``shard_map`` over the vector dim with the batch loop
+    *inside* (vmap over RHS, or the block cycle over block vectors
+    partitioned along ``n`` — one halo exchange serves all p RHS) — one
+    XLA program, ``k`` systems, ``shard`` devices.  See :func:`gmres`.
     """
     if B.ndim != 2:
         raise ValueError(f"B must be (batch, n), got {B.shape}")
+    if method not in ("vmap", "block"):
+        raise ValueError(f"unknown batched method {method!r}; "
+                         f"expected one of ('vmap', 'block')")
+    if driver not in ("device", "host"):
+        raise ValueError(f"unknown driver {driver!r}; "
+                         f"expected one of ('device', 'host')")
     if shard is not None:
+        if driver != "device":
+            raise ValueError("shard= requires the device driver")
         from repro.solver.sharded import sharded_gmres
 
         return sharded_gmres(
@@ -777,7 +948,24 @@ def gmres_batched(
             precond=precond, ortho=ortho, m=m, max_iters=max_iters,
             target_rrn=target_rrn, arith_dtype=arith_dtype, eta=eta,
             matvec=matvec, shard=shard, transport=shard_transport,
-            partition_mode=shard_matvec, reorder=reorder)
+            partition_mode=shard_matvec, reorder=reorder, method=method)
+    if method == "block":
+        from repro.solver.block import gmres_block
+
+        return gmres_block(
+            A, B, X0=X0, storage=storage, policy=policy, precond=precond,
+            ortho=ortho, m=m, max_iters=max_iters, target_rrn=target_rrn,
+            arith_dtype=arith_dtype, eta=eta, matvec=matvec, driver=driver,
+            reorder=reorder)
+    if driver == "host":
+        return [
+            gmres(A, B[i], x0=None if X0 is None else X0[i],
+                  storage=storage, policy=policy, precond=precond,
+                  ortho=ortho, m=m, max_iters=max_iters,
+                  target_rrn=target_rrn, arith_dtype=arith_dtype, eta=eta,
+                  matvec=matvec, driver="host", reorder=reorder)
+            for i in range(B.shape[0])
+        ]
     user_matvec = matvec
     plan = _plan_unsharded(A, reorder, user_matvec)
     if plan is not None:

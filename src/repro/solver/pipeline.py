@@ -51,6 +51,11 @@ __all__ = [
     "MGSOrthogonalizer",
     "CGS2Orthogonalizer",
     "orthogonalizer_by_name",
+    "BlockOrthogonalizer",
+    "BlockMGSOrthogonalizer",
+    "BlockCGS2Orthogonalizer",
+    "block_orthogonalizer_by_name",
+    "block_qr",
     "Preconditioner",
     "IdentityPreconditioner",
     "JacobiPreconditioner",
@@ -160,6 +165,152 @@ def orthogonalizer_by_name(name) -> Orthogonalizer:
         raise ValueError(
             f"unknown orthogonalizer {name!r}; "
             f"have {sorted(_ORTHOGONALIZERS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Block orthogonalizers (block-GMRES: one basis sweep serves all p RHS)
+# ---------------------------------------------------------------------------
+
+_TINY = 1e-300
+#: relative threshold below which a new block direction is declared linearly
+#: dependent and deflated (its q column zeroed, its T diagonal zeroed) —
+#: relative to the largest column scale of the incoming block, so converged
+#: RHS columns (exactly zero residual blocks) always deflate.
+DEFLATE_RTOL = 1e-13
+
+
+def block_qr(W, dist=LOCAL, scale=None):
+    """Rank-revealing QR of a block ``W (p, n)`` of row-stacked vectors.
+
+    Returns ``(Q, T, dep)`` with ``W[b] = sum_{a<=b} T[a, b] Q[a]``:
+    ``Q (p, n)`` has orthonormal rows except where ``dep`` marks a column
+    as linearly dependent (or zero) — those rows are exact zeros and their
+    ``T`` diagonal is 0.  This is the deflation mechanism of block-GMRES:
+    converged or dependent right-hand sides stop contributing basis
+    directions but keep their (upper-triangular) couplings, so the block
+    Arnoldi relation stays exact.
+
+    Gram-Schmidt with a second projection pass (CGS2-strength within the
+    block; ``p`` is small, the columns loop is static).  All inner products
+    route through ``dist`` so the same QR runs on full vectors and on
+    row-partitioned chunks inside ``shard_map`` — one batched ``(k,)``
+    reduction per column, not ``k`` scalar ones.
+    """
+    p = W.shape[0]
+    ad = W.dtype
+    if scale is None:
+        scale = dist.col_norms(W)
+    block_scale = jnp.max(scale)
+    Q = jnp.zeros_like(W)
+    T = jnp.zeros((p, p), ad)
+    dep = jnp.zeros((p,), bool)
+    for k in range(p):
+        wk = W[k]
+        if k:
+            r = dist.sum(Q[:k] @ wk)
+            wk = wk - r @ Q[:k]
+            r2 = dist.sum(Q[:k] @ wk)
+            wk = wk - r2 @ Q[:k]
+            T = T.at[:k, k].set(r + r2)
+        nrm = dist.norm(wk)
+        dep_k = nrm <= DEFLATE_RTOL * block_scale + _TINY
+        qk = jnp.where(dep_k, 0.0, wk / jnp.maximum(nrm, _TINY))
+        Q = Q.at[k].set(qk)
+        T = T.at[k, k].set(jnp.where(dep_k, 0.0, nrm))
+        dep = dep.at[k].set(dep_k)
+    return Q, T, dep
+
+
+class BlockOrthogonalizer:
+    """Orthogonalize a block ``W (p, n)`` against the masked block basis.
+
+    ``__call__(acc, store, W, mask, eta, dist, w_norms) -> (Q, H, T,
+    fired)`` where ``acc`` is a
+    :class:`~repro.core.accessor.BlockBasisAccessor`, ``H (m+1, p, p)`` are
+    the block Hessenberg couplings against the masked rows (one einsum per
+    sweep — the whole shared basis is read once for all ``p`` RHS, which is
+    the bandwidth amortization this mode exists for), and ``(Q, T)`` is the
+    rank-revealing QR of the orthogonalized block (:func:`block_qr` —
+    deflated columns have zero ``Q`` rows and zero ``T`` diagonal).
+
+    ``fired`` counts extra conditional sweeps exactly like the scalar
+    protocol, and ``w_norms`` is the caller's already-reduced per-column
+    norm of ``W`` (saves a reduction, as in the scalar contract).
+    """
+
+    name: str = "base"
+    passes: int = 1
+
+    def __call__(self, acc, store, W, mask, eta, dist=LOCAL,
+                 w_norms=None):  # pragma: no cover
+        raise NotImplementedError
+
+    def spec(self):
+        return ("block-ortho", self.name)
+
+
+class BlockMGSOrthogonalizer(BlockOrthogonalizer):
+    """Block analogue of the seed scheme: one sweep + conditional reorth.
+
+    The re-orthogonalization fires when *any* column lost more than the
+    ``eta`` fraction of its norm — the block shares one basis sweep, so the
+    conditional pass is all-or-nothing (a per-column pass would read the
+    basis again anyway).
+    """
+
+    name = "mgs"
+    passes = 1
+
+    def __call__(self, acc, store, W, mask, eta, dist=LOCAL, w_norms=None):
+        w_pre = dist.col_norms(W) if w_norms is None else w_norms
+        H = acc.block_dots(store, W, mask)
+        W = W - acc.block_combine(store, H, mask)
+        nrm = dist.col_norms(W)
+        fired = jnp.any(nrm < eta * w_pre)
+
+        def reorth(args):
+            W, H = args
+            U = acc.block_dots(store, W, mask)
+            return W - acc.block_combine(store, U, mask), H + U
+
+        W, H = jax.lax.cond(fired, reorth, lambda a: a, (W, H))
+        Q, T, _ = block_qr(W, dist, scale=w_pre)
+        return Q, H, T, fired.astype(jnp.int32)
+
+
+class BlockCGS2Orthogonalizer(BlockOrthogonalizer):
+    """Two unconditional block sweeps (CGS-2): branch-free, machine-precision
+    orthogonality, twice the basis traffic — the same trade as the scalar
+    ``cgs2``."""
+
+    name = "cgs2"
+    passes = 2
+
+    def __call__(self, acc, store, W, mask, eta, dist=LOCAL, w_norms=None):
+        w_pre = dist.col_norms(W) if w_norms is None else w_norms
+        H = acc.block_dots(store, W, mask)
+        W = W - acc.block_combine(store, H, mask)
+        U = acc.block_dots(store, W, mask)
+        W = W - acc.block_combine(store, U, mask)
+        Q, T, _ = block_qr(W, dist, scale=w_pre)
+        return Q, H + U, T, jnp.asarray(0, jnp.int32)
+
+
+_BLOCK_ORTHOGONALIZERS = {"mgs": BlockMGSOrthogonalizer,
+                          "cgs2": BlockCGS2Orthogonalizer}
+
+
+def block_orthogonalizer_by_name(name) -> BlockOrthogonalizer:
+    if isinstance(name, BlockOrthogonalizer):
+        return name
+    if isinstance(name, Orthogonalizer):
+        name = name.name                 # scalar choice carries over by name
+    try:
+        return _BLOCK_ORTHOGONALIZERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown block orthogonalizer {name!r}; "
+            f"have {sorted(_BLOCK_ORTHOGONALIZERS)}") from None
 
 
 # ---------------------------------------------------------------------------
@@ -449,7 +600,8 @@ _ADAPTIVE_DEFAULT = (("float64", None), ("frsz2_32", 1e-2), ("frsz2_16", 1e-6))
 
 
 def policy_by_name(name: str, *, arith_dtype=jnp.float64,
-                   target_rrn: float | None = None, **ctx
+                   target_rrn: float | None = None,
+                   m: int | None = None, **ctx
                    ) -> PrecisionPolicy:
     """Resolve a policy from a name.
 
@@ -463,9 +615,11 @@ def policy_by_name(name: str, *, arith_dtype=jnp.float64,
     format has no threshold; each later ``fmt@thr`` activates once the
     restart residual falls below ``thr``.
 
-    ``target_rrn`` is threaded through by the solvers (it is their
-    ``target_rrn`` argument); only ``adaptive:auto`` consumes it.
+    ``target_rrn`` and ``m`` are threaded through by the solvers (their
+    ``target_rrn`` / restart-length arguments); ``adaptive:auto`` and the
+    ``mixed:auto:<tail>`` format consume them.
     """
+    ctx = dict(ctx, target_rrn=target_rrn, m=m)
     kind, _, rest = name.partition(":")
     if kind == "static":
         if not rest:
@@ -473,7 +627,10 @@ def policy_by_name(name: str, *, arith_dtype=jnp.float64,
         return StaticPolicy(format_by_name(rest, arith_dtype=arith_dtype,
                                            **ctx))
     if kind != "adaptive":
-        raise ValueError(f"unknown policy {name!r}")
+        raise ValueError(
+            f"unknown policy {name!r}; expected one of 'static:<fmt>', "
+            f"'adaptive', 'adaptive:auto', or "
+            f"'adaptive:<f0>,<f1>@<t1>,...'")
     if rest == "auto":
         if target_rrn is not None:
             levels = tuple(
@@ -501,13 +658,15 @@ def policy_by_name(name: str, *, arith_dtype=jnp.float64,
 
 
 def resolve_policy(policy, storage, arith_dtype,
-                   target_rrn: float | None = None) -> PrecisionPolicy:
+                   target_rrn: float | None = None,
+                   m: int | None = None) -> PrecisionPolicy:
     """Combine the ``policy`` / ``storage`` arguments into one policy.
 
     ``policy`` wins when given (object or name); otherwise the storage
     format (object, name, or None -> native arith dtype) becomes a
     :class:`StaticPolicy` — the seed code path, bit for bit.
-    ``target_rrn`` feeds ``adaptive:auto``'s derived thresholds.
+    ``target_rrn`` feeds ``adaptive:auto``'s derived thresholds; together
+    with ``m`` it also sizes ``mixed:auto:<tail>`` heads.
     """
     from repro.core.accessor import NativeFormat
 
@@ -516,12 +675,16 @@ def resolve_policy(policy, storage, arith_dtype,
             return policy
         if isinstance(policy, str):
             return policy_by_name(policy, arith_dtype=arith_dtype,
-                                  target_rrn=target_rrn)
-        raise ValueError(f"unknown policy {policy!r}")
+                                  target_rrn=target_rrn, m=m)
+        raise ValueError(
+            f"unknown policy {policy!r}; expected a PrecisionPolicy or a "
+            f"name ('static:<fmt>', 'adaptive', 'adaptive:auto', "
+            f"'adaptive:<f0>,<f1>@<t1>,...')")
     if storage is None:
         return StaticPolicy(NativeFormat(dtype=arith_dtype))
     if isinstance(storage, str):
-        return StaticPolicy(format_by_name(storage, arith_dtype=arith_dtype))
+        return StaticPolicy(format_by_name(storage, arith_dtype=arith_dtype,
+                                           target_rrn=target_rrn, m=m))
     if isinstance(storage, PrecisionPolicy):
         return storage
     return StaticPolicy(storage)

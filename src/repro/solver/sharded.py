@@ -48,9 +48,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.accessor import BasisAccessor, ShardedFormat
+from repro.core.accessor import BasisAccessor, BlockBasisAccessor, ShardedFormat
 from repro.dist.context import DistContext
-from repro.dist.sharding import driver_partition_specs, vector_partition_spec
+from repro.dist.sharding import (
+    block_driver_partition_specs,
+    driver_partition_specs,
+    vector_partition_spec,
+)
+from repro.solver.block import _block_device_solve_fn, _block_results
 from repro.solver.gmres import (
     _device_result,
     _device_solve_fn,
@@ -61,6 +66,7 @@ from repro.solver.gmres import (
 from repro.solver.pipeline import (
     AdaptivePolicy,
     StaticPolicy,
+    block_orthogonalizer_by_name,
     orthogonalizer_by_name,
     resolve_policy,
     resolve_preconditioner,
@@ -111,12 +117,18 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
                   arith_dtype=None, eta: float = 0.7071067811865475,
                   matvec=None, shard: int = 1, transport: str = "plain",
                   axis_name: str = "basis", partition_mode: str = "auto",
-                  reorder: str = "auto"):
+                  reorder: str = "auto", method: str = "vmap"):
     """Run ``gmres``/``gmres_batched`` semantics under ``shard_map``.
 
     Called through ``gmres(..., shard=P)`` — see that docstring.  ``b`` is
     ``(n,)``, or ``(k, n)`` with ``batched=True``; returns the matching
     :class:`~repro.solver.gmres.GmresResult` (or list of them).
+
+    ``method="block"`` (batched only) runs the block-GMRES driver
+    (:mod:`repro.solver.block`) inside the same ``shard_map``: the block
+    basis rows flatten to one ``p * n_local`` chunk per device, so the
+    sharded storage formats apply unchanged, and one batched halo
+    exchange per block matvec serves all ``p`` right-hand sides.
 
     All host-side operator prep — optional RCM reordering, padding
     geometry, bandwidth probing, matvec-mode arbitration — comes from one
@@ -127,6 +139,12 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
     if transport not in _TRANSPORTS:
         raise ValueError(f"unknown shard transport {transport!r}; "
                          f"expected one of {_TRANSPORTS}")
+    if method not in ("vmap", "block"):
+        raise ValueError(f"unknown batched method {method!r}; "
+                         f"expected one of ('vmap', 'block')")
+    block = method == "block"
+    if block and not batched:
+        raise ValueError("method='block' needs batched=True (B is (p, n))")
     if matvec is not None:
         raise ValueError(
             "shard= needs an operator with partitionable rows (CSR/ELL); "
@@ -153,21 +171,31 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
 
     compressed_dots = transport in ("compressed", "compressed+norms")
     policy = _wrap_policy(
-        resolve_policy(policy, storage, arith_dtype, target_rrn),
+        resolve_policy(policy, storage, arith_dtype, target_rrn, m),
         axis_name, compressed_dots)
-    accs = tuple(
-        BasisAccessor(fmt=f, m=m + 1, n=n_local, arith_dtype=arith_dtype)
-        for f in policy.formats()
-    )
+    if block:
+        p_rhs = int(b.shape[0])
+        accs = tuple(
+            BlockBasisAccessor(fmt=f, m=m + 1, p=p_rhs, n=n_local,
+                               arith_dtype=arith_dtype)
+            for f in policy.formats()
+        )
+        ortho_obj = block_orthogonalizer_by_name(ortho)
+    else:
+        accs = tuple(
+            BasisAccessor(fmt=f, m=m + 1, n=n_local,
+                          arith_dtype=arith_dtype)
+            for f in policy.formats()
+        )
+        ortho_obj = orthogonalizer_by_name(ortho)
     precond_obj = resolve_preconditioner(precond, plan.operator).shard_local(
         axis_name, n_local, n_pad)
-    ortho_obj = orthogonalizer_by_name(ortho)
     dist = DistContext(axis_name=axis_name,
                        compressed_norms=transport == "compressed+norms")
 
     solve, operand = _cached_sharded_solve(
         plan, batched, accs, policy, m, max_iters, eta, target_rrn,
-        ortho_obj, precond_obj, dist, axis_name, compressed_dots)
+        ortho_obj, precond_obj, dist, axis_name, compressed_dots, method)
 
     b = plan.permute(b).astype(arith_dtype)
     if x0 is None:
@@ -186,6 +214,8 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
     states = dict(states, x=plan.unpermute(states["x"][..., :n]))
     if not batched:
         return _device_result(states)
+    if block:
+        return _block_results(states)
     return [
         _device_result(jax.tree.map(lambda a: a[i], states))
         for i in range(b.shape[0])
@@ -216,7 +246,7 @@ def _plan_and_precond(A, p_dev, reorder, partition_mode, precond):
 
 def _build_sharded_solve(plan, batched, accs, policy, m, max_iters, eta,
                          target_rrn, ortho, precond, dist, axis_name,
-                         compressed_halo):
+                         compressed_halo, method):
     mesh = Mesh(np.asarray(jax.devices()[:plan.n_shards]), (axis_name,))
     operand, op_specs, local_mv = partition_matvec(
         plan=plan, axis_name=axis_name, mesh=mesh,
@@ -227,23 +257,40 @@ def _build_sharded_solve(plan, batched, accs, policy, m, max_iters, eta,
     # as lossy basis storage vs exact arithmetic in CB-GMRES itself)
     local_rmv = local_mv.exact
 
-    def solve_local(op, b_loc, x0_loc):
-        mv = lambda v: local_mv(op, v)  # noqa: E731
-        rmv = lambda v: local_rmv(op, v)  # noqa: E731
-        fn = _device_solve_fn(mv, accs, policy, m, max_iters, eta,
-                              target_rrn, ortho, precond, dist,
-                              residual_matvec=rmv)
-        return fn(b_loc, x0_loc)
-
-    if batched:
+    if method == "block":
+        # the block driver batches the matvec itself (jax.vmap inside the
+        # solve fn), so the per-block halo exchange ships all p boundary
+        # strips in one batched ppermute — the amortization the block
+        # method exists for
         def run(op, B_loc, X0_loc):
-            return jax.vmap(lambda bb, xx: solve_local(op, bb, xx))(
-                B_loc, X0_loc)
-    else:
-        run = solve_local
+            mv = lambda v: local_mv(op, v)  # noqa: E731
+            rmv = lambda v: local_rmv(op, v)  # noqa: E731
+            fn = _block_device_solve_fn(mv, accs, policy, m, max_iters,
+                                        eta, target_rrn, ortho, precond,
+                                        dist, residual_matvec=rmv)
+            return fn(B_loc, X0_loc)
 
-    vec_spec = vector_partition_spec(axis_name, batched=batched)
-    state_specs = driver_partition_specs(accs, axis_name, batched=batched)
+        vec_spec = vector_partition_spec(axis_name, batched=True)
+        state_specs = block_driver_partition_specs(accs, axis_name)
+    else:
+        def solve_local(op, b_loc, x0_loc):
+            mv = lambda v: local_mv(op, v)  # noqa: E731
+            rmv = lambda v: local_rmv(op, v)  # noqa: E731
+            fn = _device_solve_fn(mv, accs, policy, m, max_iters, eta,
+                                  target_rrn, ortho, precond, dist,
+                                  residual_matvec=rmv)
+            return fn(b_loc, x0_loc)
+
+        if batched:
+            def run(op, B_loc, X0_loc):
+                return jax.vmap(lambda bb, xx: solve_local(op, bb, xx))(
+                    B_loc, X0_loc)
+        else:
+            run = solve_local
+
+        vec_spec = vector_partition_spec(axis_name, batched=batched)
+        state_specs = driver_partition_specs(accs, axis_name,
+                                             batched=batched)
     sm = jax.shard_map(run, mesh=mesh,
                        in_specs=(op_specs, vec_spec, vec_spec),
                        out_specs=state_specs, axis_names={axis_name},
@@ -253,7 +300,7 @@ def _build_sharded_solve(plan, batched, accs, policy, m, max_iters, eta,
 
 def _cached_sharded_solve(plan, batched, accs, policy, m, max_iters, eta,
                           target_rrn, ortho, precond, dist, axis_name,
-                          compressed_halo):
+                          compressed_halo, method):
     pins: tuple = ()
 
     def make_key():
@@ -263,7 +310,8 @@ def _cached_sharded_solve(plan, batched, accs, policy, m, max_iters, eta,
         # without a fingerprint fall back to identity keying (pinned)
         op_key, pins = _operator_key(plan.operator, None, plan)
         pins = pins + (precond,)
-        return (op_key, batched, policy.spec(), ortho.name, precond.spec(),
+        return (op_key, batched, method, getattr(accs[0], "p", 0),
+                policy.spec(), ortho.name, precond.spec(),
                 dist.spec(), accs[0].m, accs[0].n,
                 jnp.dtype(accs[0].arith_dtype).name, m, max_iters,
                 float(eta), float(target_rrn), plan.n_shards, axis_name,
@@ -272,7 +320,7 @@ def _cached_sharded_solve(plan, batched, accs, policy, m, max_iters, eta,
     def build():
         solve, operand = _build_sharded_solve(
             plan, batched, accs, policy, m, max_iters, eta, target_rrn,
-            ortho, precond, dist, axis_name, compressed_halo)
+            ortho, precond, dist, axis_name, compressed_halo, method)
         return solve, operand, pins
 
     ent = _lru_cached(_SHARDED_CACHE, _SHARDED_CACHE_SIZE, make_key, build)

@@ -95,6 +95,14 @@ class CSR:
             bw = self._bandwidth = int(off.max()) if off.size else 0
         return bw
 
+    def nbytes(self) -> int:
+        """Bytes one full SpMV streams from the operator: values, column
+        indices, and the row pointer — the A-traffic term of the paper's
+        bandwidth model (the basis terms come from the storage formats)."""
+        return int(self.data.size * self.data.dtype.itemsize
+                   + self.indices.size * self.indices.dtype.itemsize
+                   + self.indptr.size * self.indptr.dtype.itemsize)
+
     def __matmul__(self, x):
         return self.matvec(x)
 
@@ -171,6 +179,12 @@ class ELL:
             off = np.abs(np.asarray(self.cols) - rows)[live]
             bw = self._bandwidth = int(off.max()) if off.size else 0
         return bw
+
+    def nbytes(self) -> int:
+        """Bytes one full SpMV streams: padded values + column indices
+        (see :meth:`CSR.nbytes`; ELL has no row pointer)."""
+        return int(self.vals.size * self.vals.dtype.itemsize
+                   + self.cols.size * self.cols.dtype.itemsize)
 
     def __matmul__(self, x):
         return self.matvec(x)

@@ -1,0 +1,311 @@
+"""Block-GMRES: one shared Krylov basis for a batch of right-hand sides.
+
+Contracts under test:
+
+* **Accuracy parity** — ``gmres_batched(..., method="block")`` reaches the
+  same final accuracy as the per-RHS vmap baseline (hypothesis property
+  over batch size and RHS content, host and device drivers);
+* **Deflation** — a right-hand side that converges cycles earlier is
+  frozen (its column drops out of the block) while the others keep
+  iterating, and its solution is not disturbed;
+* **Amortization accounting** — block results carry 1/p shares of the
+  batch's shared ``op_reads``/``bytes_read``, so batch sums are
+  comparable to (and, for the operator term, far below) the vmap sums;
+* **Sharded block** — the same block solve inside ``shard_map`` on 8
+  emulated devices matches the single-device block solve exactly for
+  f64 (subprocess, same isolation pattern as test_sharded_driver);
+* **mixed:auto** — the self-sizing head derives from (target_rrn, m) and
+  behaves monotonically;
+* **Error surfaces** — name-lookup failures list the available choices.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accessor import format_by_name
+from repro.solver import gmres, gmres_batched, gmres_block
+from repro.solver.pipeline import (
+    block_orthogonalizer_by_name,
+    block_qr,
+    orthogonalizer_by_name,
+    policy_by_name,
+)
+from repro.sparse import make_problem, rhs_for
+
+from tests._hypothesis_compat import given, settings, st
+
+
+def _problem(n=216, name="synth:atmosmod"):
+    A, rrn = make_problem(name, n)
+    b, _ = rhs_for(A)
+    return A, b, rrn
+
+
+def _rhs_batch(A, p, seed):
+    rng = np.random.default_rng(seed)
+    B = rng.standard_normal((p, A.shape[0]))
+    return jnp.asarray(B / np.linalg.norm(B, axis=1, keepdims=True))
+
+
+# ---------------------------------------------------------------------------
+# accuracy parity vs the vmap baseline (property, host + device)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=1, max_value=4), st.integers(0, 1000))
+def test_block_matches_vmap_accuracy_device(p, seed):
+    A, _, _ = _problem()
+    B = _rhs_batch(A, p, seed)
+    kw = dict(storage="float64", m=20, max_iters=600, target_rrn=1e-10)
+    blk = gmres_batched(A, B, method="block", **kw)
+    ref = gmres_batched(A, B, method="vmap", **kw)
+    for b_res, r_res in zip(blk, ref):
+        assert b_res.converged and r_res.converged
+        assert b_res.rrn <= 1e-10 and r_res.rrn <= 1e-10
+        # both solved the same system: solutions agree to target accuracy
+        assert float(jnp.max(jnp.abs(b_res.x - r_res.x))) < 1e-7
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=1, max_value=3), st.integers(0, 1000))
+def test_block_matches_vmap_accuracy_host(p, seed):
+    A, _, _ = _problem()
+    B = _rhs_batch(A, p, seed)
+    kw = dict(storage="float64", m=20, max_iters=600, target_rrn=1e-10)
+    blk = gmres_batched(A, B, method="block", driver="host", **kw)
+    dev = gmres_batched(A, B, method="block", driver="device", **kw)
+    for h, d in zip(blk, dev):
+        assert h.converged and d.converged
+        # host and device drivers take identical decisions
+        assert h.iterations == d.iterations
+        assert abs(h.rrn - d.rrn) <= 1e-12
+        assert abs(h.op_reads - d.op_reads) <= 1e-9
+        assert abs(h.bytes_read - d.bytes_read) <= 1e-3 * h.bytes_read
+
+
+def test_block_compressed_basis_converges():
+    A, _, _ = _problem()
+    B = _rhs_batch(A, 3, seed=7)
+    res = gmres_batched(A, B, method="block", storage="frsz2_32", m=20,
+                        max_iters=600, target_rrn=1e-8)
+    assert all(r.converged for r in res)
+    assert all(r.rrn <= 1e-8 for r in res)
+
+
+def test_block_p1_matches_scalar_exactly():
+    A, b, _ = _problem()
+    kw = dict(storage="float64", m=20, max_iters=600, target_rrn=1e-10)
+    blk = gmres_batched(A, b[None, :], method="block", **kw)[0]
+    ref = gmres(A, b, **kw)
+    assert blk.iterations == ref.iterations
+    assert abs(blk.rrn - ref.rrn) <= 1e-14
+    assert float(jnp.max(jnp.abs(blk.x - ref.x))) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# deflation: an early-converging column freezes, the rest keep iterating
+# ---------------------------------------------------------------------------
+
+
+def test_deflation_freezes_converged_column():
+    A, b, _ = _problem()
+    B = _rhs_batch(A, 3, seed=3)
+    # column 0 starts at the solution (up to roundoff): it must converge
+    # cycles earlier than the random columns and then stop counting
+    x_sol = np.asarray(gmres(A, B[0], storage="float64", m=20,
+                             max_iters=600, target_rrn=1e-12).x)
+    X0 = jnp.asarray(np.stack([x_sol, np.zeros_like(x_sol),
+                               np.zeros_like(x_sol)]))
+    res = gmres_batched(A, B, X0=X0, method="block", storage="float64",
+                        m=20, max_iters=600, target_rrn=1e-10)
+    assert all(r.converged for r in res)
+    assert res[0].iterations < min(res[1].iterations, res[2].iterations)
+    # the frozen column's solution is the (already-converged) start point
+    assert float(jnp.max(jnp.abs(res[0].x - X0[0]))) < 1e-8
+
+
+def test_block_qr_deflates_dependent_columns():
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.standard_normal((4, 64)))
+    W = W.at[2].set(2.0 * W[0] + 1.0 * W[1])   # exactly dependent
+    W = W.at[3].set(0.0)                       # exactly zero
+    Q, T, dep = block_qr(W)
+    assert not dep[0] and not dep[1]
+    assert dep[2] and dep[3]
+    # deflated columns produce zero q-vectors and zero diagonal in T
+    assert float(jnp.max(jnp.abs(Q[2]))) == 0.0
+    assert float(jnp.max(jnp.abs(Q[3]))) == 0.0
+    # live part reconstructs: W ~= T^T stacked onto Q rows
+    recon = jnp.einsum("kb,kn->bn", T, Q)
+    assert float(jnp.max(jnp.abs(recon[:2] - W[:2]))) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# shared-traffic accounting: 1/p shares, operator amortization
+# ---------------------------------------------------------------------------
+
+
+def test_block_amortizes_operator_reads():
+    A, _, _ = _problem()
+    p = 4
+    B = _rhs_batch(A, p, seed=11)
+    kw = dict(storage="float64", m=20, max_iters=600, target_rrn=1e-10)
+    blk = gmres_batched(A, B, method="block", **kw)
+    ref = gmres_batched(A, B, method="vmap", **kw)
+    # every column carries an equal share of the shared traffic
+    assert len({round(r.op_reads, 9) for r in blk}) == 1
+    assert len({round(r.bytes_read, 3) for r in blk}) == 1
+    blk_ops = sum(r.op_reads for r in blk)
+    ref_ops = sum(r.op_reads for r in ref)
+    # one batched SpMV per block step: ~1/p of the vmap operator passes
+    assert blk_ops < 0.5 * ref_ops
+    # the shared basis is read once per sweep for the whole batch: the
+    # block basis traffic stays below the summed vmap basis traffic
+    assert sum(r.bytes_read for r in blk) < sum(r.bytes_read for r in ref)
+
+
+def test_scalar_op_reads_host_device_parity():
+    A, b, _ = _problem()
+    kw = dict(storage="float64", m=20, max_iters=600, target_rrn=1e-10)
+    dev = gmres(A, b, **kw)
+    host = gmres(A, b, driver="host", **kw)
+    assert dev.op_reads > 0
+    assert abs(dev.op_reads - host.op_reads) <= 1e-9
+
+
+# ---------------------------------------------------------------------------
+# sharded block solve: 8 emulated devices in a subprocess
+# ---------------------------------------------------------------------------
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.solver import gmres_batched
+from repro.sparse import make_problem
+
+A, target = make_problem("synth:atmosmod", 512)
+rng = np.random.default_rng(5)
+B = rng.standard_normal((3, A.shape[0]))
+B /= np.linalg.norm(B, axis=1, keepdims=True)
+kw = dict(m=20, max_iters=600, target_rrn=1e-10, storage="float64")
+
+ref = gmres_batched(A, B, method="block", **kw)
+sh = gmres_batched(A, B, method="block", shard=8, **kw)
+out = {"f64": [
+    dict(it1=r.iterations, it8=s.iterations, rrn1=r.rrn, rrn8=s.rrn,
+         conv=bool(r.converged and s.converged),
+         ops1=r.op_reads, ops8=s.op_reads,
+         x_err=float(np.max(np.abs(np.asarray(r.x) - np.asarray(s.x)))))
+    for r, s in zip(ref, sh)
+]}
+
+c8 = gmres_batched(A, B, method="block", shard=8, m=20, max_iters=600,
+                   target_rrn=1e-8, storage="frsz2_32",
+                   shard_transport="compressed")
+out["frsz2"] = dict(conv=bool(all(r.converged for r in c8)),
+                    rrn=max(r.rrn for r in c8))
+
+print(json.dumps(out))
+"""
+
+
+def test_sharded_block_end_to_end_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for entry in res["f64"]:
+        assert entry["conv"], entry
+        assert entry["it1"] == entry["it8"], entry
+        assert abs(entry["rrn1"] - entry["rrn8"]) <= 1e-12, entry
+        assert abs(entry["ops1"] - entry["ops8"]) <= 1e-9, entry
+        assert entry["x_err"] < 1e-10, entry
+    assert res["frsz2"]["conv"], res["frsz2"]
+    assert res["frsz2"]["rrn"] <= 1e-8, res["frsz2"]
+
+
+def test_sharded_block_shard1_in_process():
+    A, _, _ = _problem()
+    B = _rhs_batch(A, 2, seed=9)
+    kw = dict(storage="float64", m=20, max_iters=600, target_rrn=1e-10)
+    ref = gmres_batched(A, B, method="block", **kw)
+    sh = gmres_batched(A, B, method="block", shard=1, **kw)
+    for r, s in zip(ref, sh):
+        assert r.iterations == s.iterations
+        assert abs(r.rrn - s.rrn) <= 1e-12
+        assert abs(r.op_reads - s.op_reads) <= 1e-9
+        assert float(jnp.max(jnp.abs(r.x - s.x))) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# mixed:auto head sizing
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_auto_head_derives_from_target():
+    # looser target or more accurate tail -> smaller head
+    f_tight = format_by_name("mixed:auto:frsz2_16", target_rrn=1e-12, m=30)
+    f_loose = format_by_name("mixed:auto:frsz2_16", target_rrn=1e-6, m=30)
+    assert 0 < f_loose.k <= f_tight.k <= 30
+    # frsz2_32's tail eps (~2^-24 per block max) already covers a loose
+    # target: the head vanishes entirely
+    f_zero = format_by_name("mixed:auto:frsz2_32", target_rrn=1e-4, m=30)
+    assert f_zero.k == 0
+
+
+def test_mixed_auto_solves_and_matches_explicit_head():
+    A, b, _ = _problem()
+    auto = gmres(A, b, storage="mixed:auto:frsz2_16", m=30, max_iters=600,
+                 target_rrn=1e-10)
+    assert auto.converged and auto.rrn <= 1e-10
+    k = format_by_name("mixed:auto:frsz2_16", target_rrn=1e-10, m=30).k
+    expl = gmres(A, b, storage=f"mixed:{k}:frsz2_16", m=30, max_iters=600,
+                 target_rrn=1e-10)
+    assert auto.iterations == expl.iterations
+    assert abs(auto.rrn - expl.rrn) <= 1e-14
+
+
+# ---------------------------------------------------------------------------
+# readable name-lookup errors
+# ---------------------------------------------------------------------------
+
+
+def test_orthogonalizer_errors_list_choices():
+    with pytest.raises(ValueError, match="cgs2.*mgs|mgs.*cgs2"):
+        orthogonalizer_by_name("qr")
+    with pytest.raises(ValueError, match="cgs2.*mgs|mgs.*cgs2"):
+        block_orthogonalizer_by_name("householder")
+
+
+def test_policy_errors_list_forms():
+    with pytest.raises(ValueError, match="adaptive"):
+        policy_by_name("bogus:policy", arith_dtype=jnp.float64)
+
+
+def test_batched_method_and_driver_validated():
+    A, b, _ = _problem(n=64)
+    B = b[None, :]
+    with pytest.raises(ValueError, match="vmap.*block|block.*vmap"):
+        gmres_batched(A, B, method="banana")
+    with pytest.raises(ValueError, match="device.*host|host.*device"):
+        gmres_batched(A, B, driver="gpu")
+
+
+def test_gmres_block_rejects_unbatched_rhs():
+    A, b, _ = _problem(n=64)
+    with pytest.raises(ValueError, match=r"\(batch, n\)"):
+        gmres_block(A, b)
