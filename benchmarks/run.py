@@ -16,7 +16,10 @@
 
 ``block_gmres`` also refreshes the committed ``BENCH_gmres.json``
 snapshot (per-problem iterations, modelled bytes, wall time, and the
-block-vs-vmap traffic ratio).
+block-vs-vmap traffic ratio); ``shard_wire`` refreshes
+``BENCH_shard_wire.json`` (per-mode/per-transport wire bytes per cycle on
+the 27-point stencil, including the 3-D face-vs-1-D-strip comparison)
+with its ``--check`` gates enforced.
 """
 from __future__ import annotations
 
@@ -59,10 +62,13 @@ def main(argv=None):
             n=n, max_iters=2000 if args.quick else 6000,
             ks=(0, 1, 2, 4, 8) if args.quick else mixed_sweep.DEFAULT_KS),
         "lm_roofline": lambda: lm_roofline.run(),
-        # runs in a subprocess with 8 emulated host devices
+        # runs in a subprocess with 8 emulated host devices; refreshes
+        # the committed wire snapshot with the acceptance gates enforced
         "shard_wire": lambda: shard_wire.run(
             n=512 if args.quick else 2048,
-            max_iters=1000 if args.quick else 4000),
+            max_iters=1000 if args.quick else 4000,
+            matvec="halo,rows,block3d", check=True,
+            json_path="BENCH_shard_wire.json"),
         # refreshes the committed snapshot of block-vs-vmap traffic
         "block_gmres": lambda: block_gmres.snapshot(
             "BENCH_gmres.json", n=1000 if args.quick else 2000),

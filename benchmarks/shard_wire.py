@@ -5,19 +5,25 @@ reads are compressed and the whole restart loop runs inside ``shard_map``,
 the surviving traffic is the *collectives*: the orthogonalization partial
 dots (one ``(m+1,)`` psum per inner iteration per sweep), the vector-norm
 scalar psums, and the matvec's operand movement.  This harness runs the
-real sharded solve on emulated host devices under every transport and both
-row-partitioned matvec modes, and tabulates the modelled per-device wire
-bytes per cycle — every term priced by the accounting helpers in
-:mod:`repro.dist.collectives` (``reduce_bytes`` for psums,
-``gather_bytes`` for the all-gathered operand, ``halo_bytes`` for the
-neighbor exchange), so benchmark and solver cannot drift apart.
+real sharded solve on emulated host devices under every transport and
+every row-partitioned matvec mode (1-D halo, gathered rows, 3-D block),
+and tabulates the modelled per-device wire bytes per cycle — every term
+priced through one audited path: ``reduce_bytes`` for psums and
+``OperatorPlan.matvec_wire_bytes`` for the operand movement (which itself
+dispatches to ``exchange_bytes`` / ``gather_bytes`` in
+:mod:`repro.dist.collectives`), so benchmark and solver cannot drift
+apart.
 
 What it shows (and the README documents): the **gathered matvec dominates
 everything** — a ring all-gather moves ``(P-1) * n/P`` values per device
 per matvec, while the neighbor halo exchange of a banded operator moves
 ``2 * bandwidth`` (on the 27-point stencil at P=8 that is <25% of the
 total cycle wire, with *exact* f64 iteration parity against the unsharded
-driver).  FRSZ2 on the wire pays on the *dots* reduction once the payload
+driver).  The 3-D block partition goes further still: factoring P into a
+``(Px,Py,Pz)`` process grid turns the per-matvec exchange from two
+``O(s^2)``-value boundary strips into ``O((s/P^{1/3})^2)`` faces — on
+``synth:stencil27`` at P=8 the per-device face wire is under half the 1-D
+strip wire, again at exact iteration parity.  FRSZ2 on the wire pays on the *dots* reduction once the payload
 approaches one 128-value block (restart length m ≳ 128); the *norm*
 reductions are scalars, so compressing them always ships more bytes than
 a plain 8-byte psum.
@@ -28,9 +34,12 @@ on ``synth:unstructured`` the table shows the unlock — the raw operator
 probes to the gathered fallback while the RCM-reordered one takes the
 halo path at a fraction of the wire, with exact f64 parity against the
 unreordered unsharded solve.  ``--check`` turns the acceptance conditions
-(parity exact, halo < 50% of gathered wire whenever both paths ran) into
-a nonzero exit status — the CI smoke step runs ``--quick --check`` on
-``synth:unstructured`` so wire-accounting regressions fail fast.
+(parity exact, halo < 50% of gathered wire whenever both paths ran, and
+3-D face wire strictly below the 1-D strip wire whenever both neighbor
+paths ran) into a nonzero exit status — the CI smoke steps run ``--quick
+--check`` on ``synth:unstructured`` (reordering unlock) and on
+``synth:stencil27`` with ``halo,rows,block3d`` (face-exchange gate) so
+wire-accounting regressions fail fast.
 
 Run directly (re-execs itself with emulated devices)::
 
@@ -47,7 +56,7 @@ import subprocess
 import sys
 
 TRANSPORTS = ("plain", "compressed", "compressed+norms")
-MATVEC_MODES = ("halo", "rows")
+MATVEC_MODES = ("halo", "rows", "block3d")
 
 
 def cycle_wire_bytes(m: int, j_stop: int, reorth: int, *, passes: int,
@@ -80,7 +89,6 @@ def _inner(args) -> int:
     import jax.numpy as jnp
 
     from repro.core.accessor import format_by_name
-    from repro.dist.collectives import gather_bytes, halo_bytes
     from repro.solver import gmres
     from repro.solver.gmres import _cycle_row_reads
     from repro.sparse import make_problem, plan_operator, rhs_for
@@ -125,11 +133,13 @@ def _inner(args) -> int:
               f"{'cycles':>7s} {'dots/cyc':>10s} {'norms/cyc':>10s} "
               f"{'matvec/cyc':>11s} {'total/cyc':>10s}  rrn")
         totals = {}
+        mv_plain = {}
         for matvec_mode in args.matvec.split(","):
             mplan = plan_operator(A, p, reorder=rmode,
                                   matvec_mode=matvec_mode)
             executed = mplan.matvec_mode
             probe = mplan.probe
+            mv_plain[executed] = mplan.matvec_wire_bytes()
             for transport in TRANSPORTS:
                 res = gmres(A, b, storage=args.storage, shard=p,
                             shard_transport=transport,
@@ -146,12 +156,12 @@ def _inner(args) -> int:
                 reorth_per_cycle = int(round(extra_rows / (j_avg + 1)
                                              / cycles))
                 compressed = transport != "plain"
-                if executed == "halo":
-                    inner_mv = halo_bytes(probe.strips,
-                                          compressed=compressed)
-                    residual_mv = halo_bytes(probe.strips)
-                else:
-                    inner_mv = residual_mv = gather_bytes(probe.n_local, p)
+                # one audited path for every mode: the plan prices its own
+                # operand movement (exchange_bytes for halo/block3d faces,
+                # gather_bytes for rows); residual recomputation always
+                # rides the exact (plain) transport
+                inner_mv = mplan.matvec_wire_bytes(compressed=compressed)
+                residual_mv = mv_plain[executed]
                 wire = cycle_wire_bytes(
                     m, j_avg, reorth_per_cycle, passes=1,
                     dots_compressed=compressed,
@@ -160,6 +170,9 @@ def _inner(args) -> int:
                 rows.append(dict(reorder=rmode,
                                  reorder_executed=mplan.reorder,
                                  bandwidth=probe.bandwidth,
+                                 pgrid=("x".join(map(str, mplan.pgrid))
+                                        if mplan.pgrid else None),
+                                 matvec_plain_bytes=mv_plain[executed],
                                  mode=executed, transport=transport,
                                  iters=res.iterations, cycles=cycles,
                                  rrn=res.rrn, converged=bool(res.converged),
@@ -181,6 +194,20 @@ def _inner(args) -> int:
             failures.append(
                 "reorder=rcm: halo path never executed (reordering did "
                 "not unlock it)")
+        if "block3d" in mv_plain and "halo" in mv_plain:
+            print(f"3-D face wire per matvec = {mv_plain['block3d']} B vs "
+                  f"1-D strip wire {mv_plain['halo']} B "
+                  f"({100 * mv_plain['block3d'] / mv_plain['halo']:.1f}%, "
+                  f"reorder={rmode})")
+            if args.check and mv_plain["block3d"] >= mv_plain["halo"]:
+                failures.append(
+                    f"reorder={rmode}: 3-D face wire "
+                    f"{mv_plain['block3d']} B >= 1-D strip wire "
+                    f"{mv_plain['halo']} B")
+        elif (args.check and "block3d" in args.matvec.split(",")
+              and "block3d" not in mv_plain):
+            failures.append(
+                f"reorder={rmode}: block3d path never executed")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)

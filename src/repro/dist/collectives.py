@@ -29,9 +29,11 @@ __all__ = [
     "WIRE_SPEC",
     "compressed_pmean",
     "compressed_psum",
+    "exchange_bytes",
     "gather_bytes",
     "halo_bytes",
     "halo_exchange",
+    "halo_exchange_3d",
     "halo_wire_spec",
     "pmean_bytes",
     "reduce_bytes",
@@ -120,17 +122,15 @@ def compressed_psum(tree, axis_name: str):
 # ---------------------------------------------------------------------------
 
 
-def _pshift(x, k: int, n_shards: int, axis_name: str, compressed: bool):
-    """Receive the neighbor-at-distance-``k``'s copy of ``x`` (0 < |k| <
-    n_shards): device ``p`` gets device ``p - k``'s value, edges get zeros.
+def _ppermute(x, axis_name: str, perm, compressed: bool):
+    """``ppermute`` with optional FRSZ2-compressed transport.
 
     ``ppermute`` fills unaddressed destinations with zeros, which is exactly
     the open (non-periodic) boundary a banded operator needs — no column of
-    a real matrix row reaches outside [0, n).  With ``compressed`` the strip
-    travels as FRSZ2 codes (:func:`halo_wire_spec`): zero codes decompress
-    to exact zeros, so the edge semantics survive compression.
+    a real matrix row reaches outside [0, n).  With ``compressed`` the
+    payload travels as FRSZ2 codes (:func:`halo_wire_spec`): zero codes
+    decompress to exact zeros, so the edge semantics survive compression.
     """
-    perm = [(i, i + k) for i in range(n_shards) if 0 <= i + k < n_shards]
     if not compressed:
         return jax.lax.ppermute(x, axis_name, perm)
     spec = halo_wire_spec(x.dtype)
@@ -139,6 +139,14 @@ def _pshift(x, k: int, n_shards: int, axis_name: str, compressed: bool):
     exps = jax.lax.ppermute(bc.exps, axis_name, perm)
     moved = F.BlockCompressed(codes=codes, exps=exps, n=bc.n, spec=spec)
     return F.decompress(moved).astype(x.dtype)
+
+
+def _pshift(x, k: int, n_shards: int, axis_name: str, compressed: bool):
+    """Receive the neighbor-at-distance-``k``'s copy of ``x`` (0 < |k| <
+    n_shards): device ``p`` gets device ``p - k``'s value, edges get zeros.
+    """
+    perm = [(i, i + k) for i in range(n_shards) if 0 <= i + k < n_shards]
+    return _ppermute(x, axis_name, perm, compressed)
 
 
 def halo_exchange(x_local, strips, n_shards: int, axis_name: str, *,
@@ -173,19 +181,62 @@ def halo_exchange(x_local, strips, n_shards: int, axis_name: str, *,
     return jnp.concatenate(left[::-1] + [x_local] + right)
 
 
+def halo_exchange_3d(x_local, send_idx, rounds, axis_name: str, *,
+                     compressed: bool = False):
+    """Extend this device's chunk with neighbor face/edge/corner values.
+
+    The 3-D counterpart of :func:`halo_exchange`: instead of contiguous
+    bandwidth strips, each exchange *round* gathers the referenced ghost
+    values (``x_local[send_idx[k]]``, a precomputed per-round index map
+    from :func:`repro.sparse.halo_probe.block_partition`) and ships them in
+    one ``ppermute`` along the round's disjoint ``(src, dst)`` pairs —
+    devices not sourcing a pair in that round send to nobody and receive
+    zeros, which never get referenced (the localized ELL columns only point
+    into buffers the row's operator entries actually populate).
+
+    Returns ``[x_local | recv_0 | recv_1 | ...]``, the operand the
+    block-layout local SpMV contracts boundary rows against.  ``compressed``
+    ships each round's buffer as FRSZ2 codes (:func:`halo_wire_spec`).
+    Runs inside ``shard_map`` with ``axis_name`` bound; under ``jax.vmap``
+    the gathers/ppermutes batch, so one exchange serves a whole RHS block.
+    """
+    bufs = [
+        _ppermute(x_local[..., idx], axis_name, list(pairs), compressed)
+        for idx, pairs in zip(send_idx, rounds)
+    ]
+    if not bufs:
+        return x_local
+    return jnp.concatenate([x_local, *bufs], axis=-1)
+
+
+def exchange_bytes(sizes, *, compressed: bool = False,
+                   plain_itemsize: int = 8, dtype=jnp.float64) -> int:
+    """Per-device wire payload of one exchange shipping ``sizes`` buffers.
+
+    The single audited pricing path for every neighbor-exchange flavor:
+    ``sizes`` is the per-``ppermute`` operand length, i.e. the values one
+    device *sends* in each collective — per-hop strips twice (once per
+    direction) for the 1-D halo, per-round buffer lengths for the 3-D face
+    exchange.  Compressed buffers ride :func:`halo_wire_spec` for ``dtype``
+    and pay FRSZ2's whole-block granularity per buffer (a 1-value corner
+    still ships a 128-code block).
+    """
+    if compressed:
+        spec = halo_wire_spec(dtype)
+        return sum(F.storage_nbytes(int(s), spec) for s in sizes)
+    return int(sum(int(s) for s in sizes)) * plain_itemsize
+
+
 def halo_bytes(strips, *, compressed: bool = False, plain_itemsize: int = 8,
                dtype=jnp.float64) -> int:
     """Per-device wire payload of one :func:`halo_exchange`.
 
     Each strip is both sent and received on each side, so a device moves
-    ``2 * sum(strips)`` values; compressed strips ride
-    :func:`halo_wire_spec` for ``dtype`` and pay FRSZ2's whole-block
-    granularity per strip (a 1-value strip still ships a 128-code block).
+    ``2 * sum(strips)`` values — priced through :func:`exchange_bytes` as
+    two sends per strip.
     """
-    if compressed:
-        spec = halo_wire_spec(dtype)
-        return 2 * sum(F.storage_nbytes(int(s), spec) for s in strips)
-    return 2 * int(sum(strips)) * plain_itemsize
+    return exchange_bytes(tuple(strips) * 2, compressed=compressed,
+                          plain_itemsize=plain_itemsize, dtype=dtype)
 
 
 def gather_bytes(n_local: int, n_shards: int, *,

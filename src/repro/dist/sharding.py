@@ -214,7 +214,12 @@ def driver_partition_specs(accs, axis: str = "basis", batched: bool = False):
     ``repro.solver.gmres._device_solve_fn``) runs end to end inside
     ``shard_map``; this gives the matching out_specs:
 
-      * ``x`` — the solution vector, row-partitioned over ``axis``;
+      * ``x`` — the solution vector, row-partitioned over ``axis``.
+        Vectors enter the sharded driver in **plan-embed coordinates**
+        (``OperatorPlan.embed``: the optional RCM permutation composed
+        with the 3-D block layout's padded-space permutation for
+        ``matvec_mode="block3d"``), so a contiguous ``P(axis)`` split
+        lands each device exactly on its plan chunk;
       * ``stores`` — one Krylov store per policy level, each sharded along
         the vector dim per :func:`basis_partition_specs`;
       * ``hist`` / ``rst`` and every scalar (``total``, ``cycles``,
@@ -265,7 +270,10 @@ def block_driver_partition_specs(accs, axis: str = "basis"):
 
     Unlike the scalar driver there is no ``batched`` flag: the block axis
     *is* the batch, carried inside each state leaf rather than by an outer
-    ``vmap``.  One halo exchange per block matvec serves all ``p`` RHS.
+    ``vmap``.  One halo exchange per block matvec serves all ``p`` RHS —
+    under ``matvec_mode="block3d"`` that is one *batched face* exchange
+    per block step (the round ``ppermute``s batch over the RHS axis inside
+    ``halo_exchange_3d``), not ``p`` separate exchanges.
     """
     store_specs = tuple(
         basis_partition_specs(jax.eval_shape(acc.empty), axis)

@@ -30,8 +30,10 @@ over ``P`` devices (vector dim row-partitioned; ``--shard-transport``
 picks plain vs FRSZ2-compressed collectives; ``--shard-matvec`` picks the
 row-partitioned SpMV — ``auto`` probes the operator bandwidth and uses the
 neighbor halo exchange for banded operators, the gathered operand
-otherwise) — composes with ``--batch`` for multi-device multi-RHS
-serving.  ``--reorder`` controls the setup-time RCM bandwidth-reduction
+otherwise, and the 3-D block partition when the problem carries cell
+geometry and its face wire wins; ``--shard-grid 2x2x2`` forces the
+process-grid factorization) — composes with ``--batch`` for multi-device
+multi-RHS serving.  ``--reorder`` controls the setup-time RCM bandwidth-reduction
 permutation (``auto`` applies it exactly when it unlocks the halo matvec
 for an unstructured operator; see ``repro.sparse.plan``).  See the
 README's multi-device and operator-planning sections.
@@ -67,7 +69,8 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                 precond: str | None = None, ortho: str = "mgs",
                 policy: str | None = None, shard: int | None = None,
                 shard_transport: str = "plain", shard_matvec: str = "auto",
-                reorder: str = "auto", verbose: bool = True):
+                shard_grid=None, reorder: str = "auto",
+                verbose: bool = True):
     jax.config.update("jax_enable_x64", True)
     A, rrn = make_problem(problem, n)
     if target_rrn is not None:
@@ -82,7 +85,8 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                   precond=precond, ortho=ortho, m=m, max_iters=max_iters,
                   target_rrn=rrn, shard=shard,
                   shard_transport=shard_transport,
-                  shard_matvec=shard_matvec, reorder=reorder)
+                  shard_matvec=shard_matvec, shard_grid=shard_grid,
+                  reorder=reorder)
         t0 = time.time()
         if batch > 1:
             B = _batch_rhs(A, b, batch)
@@ -106,6 +110,8 @@ def solve_suite(problem: str, n: int, formats: list[str], *, m: int = 100,
                          ortho=ortho, shard=shard or 1,
                          shard_transport=shard_transport if shard else None,
                          shard_matvec=shard_matvec if shard else None,
+                         shard_grid=("x".join(map(str, shard_grid))
+                                     if shard and shard_grid else None),
                          reorder=reorder,
                          iters=iters, rrn=res.rrn,
                          converged=conv, x_err=err,
@@ -154,10 +160,17 @@ def main(argv=None):
                     choices=["plain", "compressed", "compressed+norms"],
                     help="wire format for the sharded solve's collectives")
     ap.add_argument("--shard-matvec", default="auto",
-                    choices=["auto", "halo", "rows", "replicated"],
+                    choices=["auto", "halo", "rows", "replicated",
+                             "block3d"],
                     help="row-partitioned SpMV: auto probes the operator "
                          "bandwidth (neighbor halo exchange for banded "
-                         "operators, gathered operand otherwise)")
+                         "operators, gathered operand otherwise; 3-D block "
+                         "partition when the problem carries cell geometry "
+                         "and its face wire wins)")
+    ap.add_argument("--shard-grid", default=None,
+                    help="force the block partition's (Px,Py,Pz) process "
+                         "grid, e.g. '2x2x2' ('auto'/omitted: factor the "
+                         "mesh axis to minimize modelled face wire)")
     ap.add_argument("--reorder", default="auto",
                     choices=["auto", "rcm", "none"],
                     help="RCM bandwidth-reduction reordering at setup: "
@@ -166,6 +179,15 @@ def main(argv=None):
                          "(repro.sparse.plan)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
+    shard_grid = None
+    if args.shard_grid and args.shard_grid != "auto":
+        try:
+            shard_grid = tuple(int(p) for p in args.shard_grid.split("x"))
+            if len(shard_grid) != 3:
+                raise ValueError
+        except ValueError:
+            ap.error(f"--shard-grid must be 'PxPyPz' (e.g. 2x2x2) or "
+                     f"'auto', got {args.shard_grid!r}")
     rows = solve_suite(args.problem, args.n, args.formats.split(","),
                        m=args.m, target_rrn=args.target_rrn,
                        driver=args.driver, batch=args.batch,
@@ -174,6 +196,7 @@ def main(argv=None):
                        policy=args.policy, shard=args.shard,
                        shard_transport=args.shard_transport,
                        shard_matvec=args.shard_matvec,
+                       shard_grid=shard_grid,
                        reorder=args.reorder)
     if args.json:
         with open(args.json, "w") as f:

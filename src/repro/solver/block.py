@@ -34,6 +34,12 @@ Both drivers mirror ``repro.solver.gmres`` decision-for-decision: the
 device driver runs the whole restart loop as one jitted
 ``lax.while_loop`` (multi-level precision policies dispatch through
 ``lax.switch``); the host driver is the python-looped parity oracle.
+Sharded (``gmres_batched(..., shard=P, method="block")``, running through
+``repro.solver.sharded``), the block matvec batches over the RHS axis
+*inside* the collective: one halo exchange — one set of face
+``ppermute``s under ``matvec_mode="block3d"`` — per block step serves the
+whole batch, so the wire cost per RHS shrinks by ``1/p`` exactly like the
+basis reads.
 
 Accounting: ``bytes_read`` prices the *shared* basis once per sweep and
 ``op_reads`` counts modelled full operator passes (one per block matvec,

@@ -791,6 +791,7 @@ def gmres(
     shard: int | None = None,
     shard_transport: str = "plain",
     shard_matvec: str = "auto",
+    shard_grid: Any = None,
     reorder: str = "auto",
 ) -> GmresResult:
     """Solve A x = b with restarted (CB-)GMRES.
@@ -831,8 +832,11 @@ def gmres(
     ``benchmarks/shard_wire.py``; exists for apples-to-apples accounting).
     ``shard_matvec`` picks the row-partitioned SpMV: ``"auto"`` (probe the
     operator's bandwidth — neighbor halo exchange for banded operators,
-    gathered operand otherwise), ``"halo"``, ``"rows"``, or
-    ``"replicated"`` (see :func:`repro.sparse.shard.partition_matvec`).
+    gathered operand otherwise; the 3-D block partition when the operator
+    carries cell geometry and its modelled face wire wins), ``"halo"``,
+    ``"rows"``, ``"replicated"``, or ``"block3d"`` (see
+    :func:`repro.sparse.shard.partition_matvec`).  ``shard_grid`` forces
+    the block partition's ``(Px, Py, Pz)`` process-grid factorization.
     ``reorder`` applies an RCM bandwidth-reduction permutation at setup
     (:mod:`repro.sparse.plan`): ``"auto"`` (default) permutes only when it
     unlocks the sharded halo matvec for an otherwise-unstructured
@@ -851,7 +855,7 @@ def gmres(
             ortho=ortho, m=m, max_iters=max_iters, target_rrn=target_rrn,
             arith_dtype=arith_dtype, eta=eta, matvec=matvec, shard=shard,
             transport=shard_transport, partition_mode=shard_matvec,
-            reorder=reorder)
+            reorder=reorder, pgrid=shard_grid)
     plan = _plan_unsharded(A, reorder, user_matvec)
     if plan is not None:
         precond = _permuted_precond(precond, plan)
@@ -900,6 +904,7 @@ def gmres_batched(
     shard: int | None = None,
     shard_transport: str = "plain",
     shard_matvec: str = "auto",
+    shard_grid: Any = None,
     reorder: str = "auto",
 ) -> list[GmresResult]:
     """Solve A X[i] = B[i] for a batch of right-hand sides ``B (k, n)``.
@@ -948,7 +953,8 @@ def gmres_batched(
             precond=precond, ortho=ortho, m=m, max_iters=max_iters,
             target_rrn=target_rrn, arith_dtype=arith_dtype, eta=eta,
             matvec=matvec, shard=shard, transport=shard_transport,
-            partition_mode=shard_matvec, reorder=reorder, method=method)
+            partition_mode=shard_matvec, reorder=reorder, method=method,
+            pgrid=shard_grid)
     if method == "block":
         from repro.solver.block import gmres_block
 

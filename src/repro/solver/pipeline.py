@@ -404,8 +404,16 @@ class JacobiPreconditioner(Preconditioner):
         return ("jacobi", self._digest)
 
     def permuted(self, perm):
+        perm = np.asarray(perm)
+        inv_diag = self.inv_diag
+        if perm.shape[0] > inv_diag.shape[0]:
+            # padded-space permutation (block3d layout): pad slots map to
+            # ids >= n — identity-extend so padded entries stay exact zeros
+            inv_diag = jnp.pad(inv_diag,
+                               (0, perm.shape[0] - inv_diag.shape[0]),
+                               constant_values=1.0)
         new = object.__new__(JacobiPreconditioner)
-        new.inv_diag = self.inv_diag[jnp.asarray(np.asarray(perm))]
+        new.inv_diag = inv_diag[jnp.asarray(perm)]
         new._digest = hashlib.sha1(
             np.asarray(new.inv_diag).tobytes()).hexdigest()
         return new

@@ -117,7 +117,7 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
                   arith_dtype=None, eta: float = 0.7071067811865475,
                   matvec=None, shard: int = 1, transport: str = "plain",
                   axis_name: str = "basis", partition_mode: str = "auto",
-                  reorder: str = "auto", method: str = "vmap"):
+                  reorder: str = "auto", method: str = "vmap", pgrid=None):
     """Run ``gmres``/``gmres_batched`` semantics under ``shard_map``.
 
     Called through ``gmres(..., shard=P)`` — see that docstring.  ``b`` is
@@ -128,7 +128,12 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
     (:mod:`repro.solver.block`) inside the same ``shard_map``: the block
     basis rows flatten to one ``p * n_local`` chunk per device, so the
     sharded storage formats apply unchanged, and one batched halo
-    exchange per block matvec serves all ``p`` right-hand sides.
+    exchange per block matvec serves all ``p`` right-hand sides (for the
+    3-D block partition, one batched *face* exchange per block step).
+
+    ``pgrid`` forces the ``(Px, Py, Pz)`` process-grid factorization of
+    the 3-D block partition (``partition_mode="block3d"``, or considered
+    by ``"auto"`` when the operator carries cell geometry).
 
     All host-side operator prep — optional RCM reordering, padding
     geometry, bandwidth probing, matvec-mode arbitration — comes from one
@@ -158,7 +163,7 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
     b = jnp.asarray(b)
     n = b.shape[-1]
     plan, precond = _plan_and_precond(A, p_dev, reorder, partition_mode,
-                                      precond)
+                                      precond, pgrid)
     if plan.n != n:
         raise ValueError(f"b has trailing dim {n} but the operator "
                          f"is {plan.n}x{plan.n}")
@@ -197,21 +202,20 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
         plan, batched, accs, policy, m, max_iters, eta, target_rrn,
         ortho_obj, precond_obj, dist, axis_name, compressed_dots, method)
 
-    b = plan.permute(b).astype(arith_dtype)
+    # embed() permutes into solve coordinates *and* zero-pads in one step
+    # (the block3d layout interleaves pad slots inside device chunks, so
+    # permute-then-tail-pad would scatter real entries into pad slots)
     if x0 is None:
-        x0 = jnp.zeros_like(b)
+        x0 = jnp.zeros(b.shape, b.dtype)
     else:
         x0 = jnp.asarray(x0)
         if x0.shape != b.shape:
             raise ValueError(f"x0 shape {x0.shape} != b shape {b.shape}")
-        x0 = plan.permute(x0).astype(arith_dtype)
-    if n_pad != n:
-        widths = [(0, 0)] * (b.ndim - 1) + [(0, n_pad - n)]
-        b = jnp.pad(b, widths)
-        x0 = jnp.pad(x0, widths)
+    b = plan.embed(b).astype(arith_dtype)
+    x0 = plan.embed(x0).astype(arith_dtype)
 
     states = solve(operand, b, x0)
-    states = dict(states, x=plan.unpermute(states["x"][..., :n]))
+    states = dict(states, x=plan.extract(states["x"]))
     if not batched:
         return _device_result(states)
     if block:
@@ -222,26 +226,34 @@ def sharded_gmres(A, b, *, batched: bool = False, x0=None, storage=None,
     ]
 
 
-def _plan_and_precond(A, p_dev, reorder, partition_mode, precond):
+def _plan_and_precond(A, p_dev, reorder, partition_mode, precond,
+                      pgrid=None):
     """Plan the operator and carry the preconditioner through the plan's
     permutation.
 
     ``reorder="auto"`` declines a permutation the preconditioner cannot
     follow (a bare callable hook, or a Preconditioner without
     ``permuted``): auto only buys wire bytes, so an un-permutable
-    preconditioner outweighs it and the solve proceeds unreordered.
-    An explicit ``reorder="rcm"`` propagates the error instead.
+    preconditioner outweighs it and the solve proceeds unreordered.  The
+    same logic declines an *auto-picked* block3d layout (its padded-space
+    permutation needs the same preconditioner conjugation).  Explicit
+    ``reorder="rcm"`` / ``partition_mode="block3d"`` propagate the error
+    instead.
     """
     plan = plan_operator(A, p_dev, reorder=reorder,
-                         matvec_mode=partition_mode)
+                         matvec_mode=partition_mode, pgrid=pgrid)
     try:
         return plan, _permuted_precond(precond, plan)
     except (ValueError, NotImplementedError):
-        if reorder != "auto":
+        auto_block = plan.matvec_mode == "block3d" and partition_mode != \
+            "block3d"
+        if reorder != "auto" and not auto_block:
             raise
-        plan = plan_operator(A, p_dev, reorder="none",
-                             matvec_mode=partition_mode)
-        return plan, precond
+        plan = plan_operator(A, p_dev,
+                             reorder="none" if reorder == "auto" else reorder,
+                             matvec_mode=partition_mode, pgrid=pgrid,
+                             allow_block3d=False)
+        return plan, _permuted_precond(precond, plan)
 
 
 def _build_sharded_solve(plan, batched, accs, policy, m, max_iters, eta,

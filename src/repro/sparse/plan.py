@@ -38,24 +38,28 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.collectives import exchange_bytes, gather_bytes
+from repro.sparse.halo_probe import (
+    MAX_HALO_FRAC,
+    BlockPartition,
+    HaloProbe,
+    _ell_arrays,
+    block_partition,
+    grid_of,
+    halo_probe,
+)
 from repro.sparse.reorder import (
     inverse_permutation,
     pattern_of,
     permute_csr,
     rcm_permutation,
 )
-from repro.sparse.shard import (
-    MAX_HALO_FRAC,
-    HaloProbe,
-    _ell_arrays,
-    halo_probe,
-)
 
 __all__ = ["REORDERS", "OperatorPlan", "plan_operator"]
 
 REORDERS = ("auto", "rcm", "none")
 
-_MODES = ("auto", "halo", "rows", "replicated")
+_MODES = ("auto", "halo", "rows", "replicated", "block3d")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,17 +73,26 @@ class OperatorPlan:
     :meth:`permute` and solutions leave through :meth:`unpermute`.
 
     ``matvec_mode`` is the *resolved* partition mode ("halo" / "rows" /
-    "replicated") after probing the (reordered) operator — what
-    ``partition_matvec`` will execute.  ``probe`` is the halo geometry of
-    the reordered operator; ``raw_bandwidth`` records what the operator
-    looked like before reordering (equal to ``probe.bandwidth`` when no
-    permutation was applied).
+    "replicated" / "block3d") after probing the (reordered) operator —
+    what ``partition_matvec`` will execute.  ``probe`` is the halo
+    geometry of the reordered operator; ``raw_bandwidth`` records what the
+    operator looked like before reordering (equal to ``probe.bandwidth``
+    when no permutation was applied).
+
+    When ``matvec_mode == "block3d"``, ``block`` holds the 3-D block
+    layout + face-exchange schedule
+    (:class:`repro.sparse.halo_probe.BlockPartition`), ``operator`` is
+    already rebuilt in block layout, and ``perm`` spans the *padded*
+    index space (``n_pad`` entries, pad slots mapping to ids >= n) —
+    vectors must enter through :meth:`embed` and leave through
+    :meth:`extract`, which handle padding and layout in one step for
+    every mode.
 
     ``key`` is hashable cache-key material: (content fingerprint or None,
-    shard count, executed reorder, resolved mode).  Solve caches combine
-    it with their pipeline specs; a ``None`` fingerprint (bare-matvec
-    operator) means the plan — and anything keyed on it — is uncacheable
-    by content.
+    shard count, executed reorder, resolved mode[, cell grid, process
+    grid]).  Solve caches combine it with their pipeline specs; a ``None``
+    fingerprint (bare-matvec operator) means the plan — and anything keyed
+    on it — is uncacheable by content.
     """
 
     operator: Any
@@ -96,6 +109,8 @@ class OperatorPlan:
     probe: HaloProbe
     matvec_mode: str
     key: tuple
+    pgrid: tuple | None = None   # (Px, Py, Pz) when matvec_mode == block3d
+    block: BlockPartition | None = None
 
     # -- vector mapping -----------------------------------------------------
     def permute(self, v):
@@ -110,6 +125,38 @@ class OperatorPlan:
             return x
         return jnp.asarray(x)[..., self.iperm]
 
+    def embed(self, v):
+        """Map a length-``n`` vector into solve coordinates, zero-padded
+        to ``n_pad`` — the one entry point for every matvec mode.
+
+        The 1-D modes permute the logical entries then pad at the tail;
+        the block3d layout interleaves pad slots *inside* device chunks,
+        so padding happens first and the padded-space permutation places
+        every entry (real and pad) in its chunk slot.
+        """
+        v = jnp.asarray(v)
+        pad = self.n_pad - v.shape[-1]
+        if self.matvec_mode == "block3d":
+            if pad:
+                zeros = jnp.zeros(v.shape[:-1] + (pad,), v.dtype)
+                v = jnp.concatenate([v, zeros], axis=-1)
+            return v if self.perm is None else v[..., self.perm]
+        v = self.permute(v)
+        if pad:
+            zeros = jnp.zeros(v.shape[:-1] + (pad,), v.dtype)
+            v = jnp.concatenate([v, zeros], axis=-1)
+        return v
+
+    def extract(self, x):
+        """Map a length-``n_pad`` solve-side vector back to the original
+        length-``n`` coordinates (inverse of :meth:`embed`)."""
+        x = jnp.asarray(x)
+        if self.matvec_mode == "block3d":
+            if self.iperm is not None:
+                x = x[..., self.iperm]
+            return x[..., : self.n]
+        return self.unpermute(x[..., : self.n])
+
     # -- partition material (memoized: the O(nnz) host work) ---------------
     def ell_padded(self):
         """Zero-padded ``(cols, vals)`` ELL arrays of ``operator``.
@@ -122,7 +169,8 @@ class OperatorPlan:
         if cached is None:
             ell = _ell_arrays(self.operator)
             cols, vals = np.asarray(ell[0]), np.asarray(ell[1])
-            pad = self.n_pad - self.n
+            # block3d operators are already (n_pad, n_pad); pad the rest
+            pad = self.n_pad - self.operator.shape[0]
             if pad:
                 cols = np.pad(cols, ((0, pad), (0, 0)))
                 vals = np.pad(vals, ((0, pad), (0, 0)))
@@ -150,13 +198,51 @@ class OperatorPlan:
             object.__setattr__(self, "_ell_halo", cached)
         return cached
 
+    # -- wire accounting (the single audited path: benchmarks + tests) -----
+    def matvec_wire_sizes(self) -> tuple | None:
+        """Per-``ppermute`` operand lengths of one matvec's exchange.
+
+        The exact list of values each device *sends*: per-hop strips twice
+        (one per direction) for the 1-D halo, per-round buffer lengths for
+        the 3-D face exchange.  ``None`` when the mode moves no
+        neighbor-exchange traffic (gathered rows / replicated).
+        """
+        if self.matvec_mode == "halo":
+            return tuple(self.probe.strips) * 2
+        if self.matvec_mode == "block3d":
+            return self.block.wire_sizes
+        return None
+
+    def matvec_wire_bytes(self, *, compressed: bool = False,
+                          plain_itemsize: int = 8,
+                          dtype=jnp.float64) -> int:
+        """Modelled per-device wire bytes of one partitioned matvec.
+
+        All modes price through :func:`repro.dist.collectives`'s audited
+        helpers: neighbor-exchange modes via :func:`exchange_bytes` over
+        :meth:`matvec_wire_sizes`, the gathered-rows fallback via
+        :func:`gather_bytes`; a replicated matvec moves nothing.
+        """
+        sizes = self.matvec_wire_sizes()
+        if sizes is not None:
+            return exchange_bytes(sizes, compressed=compressed,
+                                  plain_itemsize=plain_itemsize, dtype=dtype)
+        if self.matvec_mode == "rows":
+            return gather_bytes(self.n_local, self.n_shards,
+                                plain_itemsize=plain_itemsize)
+        return 0
+
     def describe(self) -> str:
         """One-line human summary (benchmarks/launch print it)."""
         re_part = (f"rcm (bw {self.raw_bandwidth} -> "
                    f"{self.probe.bandwidth})" if self.reorder == "rcm"
                    else f"none (bw {self.raw_bandwidth})")
+        mv = self.matvec_mode
+        if mv == "block3d" and self.block is not None:
+            mv = (f"block3d pgrid={'x'.join(map(str, self.block.pgrid))} "
+                  f"wire={sum(self.block.wire_sizes)}")
         return (f"plan: n={self.n} pad={self.n_pad} shards={self.n_shards} "
-                f"reorder={re_part} matvec={self.matvec_mode}")
+                f"reorder={re_part} matvec={mv}")
 
 
 def _fingerprint(A) -> str | None:
@@ -192,7 +278,8 @@ _PLAN_CACHE_SIZE = 16
 
 
 def plan_operator(A, n_shards: int = 1, *, reorder: str = "auto",
-                  matvec_mode: str = "auto",
+                  matvec_mode: str = "auto", pgrid=None,
+                  allow_block3d: bool = True,
                   max_halo_frac: float = MAX_HALO_FRAC) -> OperatorPlan:
     """Build (or fetch) the :class:`OperatorPlan` for one solve setup.
 
@@ -206,13 +293,21 @@ def plan_operator(A, n_shards: int = 1, *, reorder: str = "auto",
 
     ``matvec_mode`` is the requested partition mode (see
     :func:`repro.sparse.shard.partition_matvec`); the plan resolves it
-    against the post-reorder probe.
+    against the post-reorder probe.  ``"block3d"`` forces the 3-D block
+    partition; ``"auto"`` additionally *considers* it (``allow_block3d``)
+    when the operator carries cell geometry (``A.grid``) or ``pgrid`` is
+    forced, adopting it only when its modelled face wire beats the 1-D
+    alternative.  ``pgrid`` forces the ``(Px, Py, Pz)`` process-grid
+    factorization (default: auto via
+    :func:`repro.sparse.halo_probe.factor_pgrid`).
 
     Plans are cached (bounded LRU) by ``(content fingerprint, n_shards,
-    reorder, matvec_mode)``: rebuilding the same matrix and solving again
-    reuses the prepared plan, skipping the O(nnz) permutation / probe /
-    ELL-conversion host work.  Operators without a content fingerprint
-    are planned uncached.
+    reorder, matvec_mode, pgrid, cell grid)`` — the cell grid is a plain
+    attribute outside the content fingerprint, so it must key explicitly.
+    Rebuilding the same matrix and solving again reuses the prepared plan,
+    skipping the O(nnz) permutation / probe / face-map / ELL-conversion
+    host work.  Operators without a content fingerprint are planned
+    uncached.
     """
     if reorder not in REORDERS:
         raise ValueError(f"unknown reorder mode {reorder!r}; "
@@ -223,19 +318,21 @@ def plan_operator(A, n_shards: int = 1, *, reorder: str = "auto",
     if A.shape[0] != A.shape[1]:
         raise ValueError(f"operator planning needs a square operator, "
                          f"got shape {A.shape}")
+    pgrid_t = None if pgrid is None else tuple(int(p) for p in pgrid)
 
     fp = _fingerprint(A)
     cache_key = None
     if fp is not None:
         cache_key = (fp, int(n_shards), reorder, matvec_mode,
-                     float(max_halo_frac))
+                     float(max_halo_frac), pgrid_t, bool(allow_block3d),
+                     grid_of(A))
         hit = _PLAN_CACHE.get(cache_key)
         if hit is not None:
             _PLAN_CACHE.move_to_end(cache_key)
             return hit
 
     plan = _build_plan(A, int(n_shards), reorder, matvec_mode,
-                       max_halo_frac, fp)
+                       max_halo_frac, fp, pgrid_t, bool(allow_block3d))
     if cache_key is not None:
         _PLAN_CACHE[cache_key] = plan
         while len(_PLAN_CACHE) > _PLAN_CACHE_SIZE:
@@ -244,12 +341,13 @@ def plan_operator(A, n_shards: int = 1, *, reorder: str = "auto",
 
 
 def _build_plan(A, n_shards: int, reorder: str, matvec_mode: str,
-                max_halo_frac: float, fp: str | None) -> OperatorPlan:
+                max_halo_frac: float, fp: str | None, pgrid: tuple | None,
+                allow_block3d: bool) -> OperatorPlan:
     raw_probe = halo_probe(A, n_shards, max_halo_frac=max_halo_frac)
     raw_bw = raw_probe.bandwidth
 
     op, perm, probe, executed = A, None, raw_probe, "none"
-    want_halo = matvec_mode in ("auto", "halo")
+    want_halo = matvec_mode in ("auto", "halo", "block3d")
     if reorder == "rcm" or (
         reorder == "auto" and want_halo and n_shards > 1
         and raw_probe.mode == "rows"
@@ -272,22 +370,64 @@ def _build_plan(A, n_shards: int, reorder: str, matvec_mode: str,
                 op, perm, probe, executed = (op_try, perm_try, probe_try,
                                              "rcm")
 
-    mode = _resolve_mode(matvec_mode, probe, op)
+    block = None
+    if matvec_mode == "block3d":
+        block = block_partition(op, n_shards, pgrid=pgrid)
+        mode = "block3d"
+    else:
+        mode = _resolve_mode(matvec_mode, probe, op)
+        # auto considers the 3-D block partition when the operator knows
+        # its cell geometry (or a process grid is forced), adopting it
+        # only when the modelled face wire beats the 1-D alternative it
+        # would replace (two-sided halo strips, or the gathered ring).
+        if (matvec_mode == "auto" and allow_block3d and n_shards > 1
+                and mode in ("halo", "rows")
+                and (pgrid is not None or grid_of(op) is not None)):
+            try:
+                cand = block_partition(op, n_shards, pgrid=pgrid)
+            except ValueError:
+                cand = None
+            if cand is not None:
+                w3 = sum(cand.wire_sizes)
+                w1 = (2 * probe.bandwidth if mode == "halo"
+                      else (n_shards - 1) * probe.n_local)
+                if w3 < w1:
+                    mode, block = "block3d", cand
+
     op_fp = _fingerprint(op) if executed == "rcm" else fp
-    key = (op_fp, int(n_shards), executed, mode)
+    n = A.shape[0]
+    if block is not None:
+        n_pad, n_local = block.n_pad, block.n_local
+        # compose (optional RCM over logical rows) with the padded-space
+        # block layout: perm_full[new chunk slot] = original row (or pad
+        # id >= n) — what embed()/extract() apply
+        perm_ext = (np.arange(n_pad) if perm is None
+                    else np.concatenate([perm, np.arange(n, n_pad)]))
+        full = perm_ext[block.perm]
+        trivial = n_pad == n and np.array_equal(full, np.arange(n))
+        perm_v = None if trivial else full
+        op = block.operator
+        key = (op_fp, int(n_shards), executed, mode, block.grid,
+               block.pgrid)
+    else:
+        n_pad, n_local = probe.n_pad, probe.n_local
+        perm_v = perm
+        key = (op_fp, int(n_shards), executed, mode)
     return OperatorPlan(
         operator=op,
-        n=A.shape[0],
+        n=n,
         n_shards=n_shards,
-        n_pad=probe.n_pad,
-        n_local=probe.n_local,
+        n_pad=n_pad,
+        n_local=n_local,
         requested_reorder=reorder,
         requested_matvec=matvec_mode,
         reorder=executed,
-        perm=perm,
-        iperm=None if perm is None else inverse_permutation(perm),
+        perm=perm_v,
+        iperm=None if perm_v is None else inverse_permutation(perm_v),
         raw_bandwidth=raw_bw,
         probe=probe,
         matvec_mode=mode,
         key=key,
+        pgrid=None if block is None else block.pgrid,
+        block=block,
     )

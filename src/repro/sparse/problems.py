@@ -81,7 +81,12 @@ def _stencil3d(nx, ny, nz, wind=(0.4, 0.2, 0.1), diff=1.0, dtype=np.float64):
 def _problem_atmosmod(n_target: int, dtype=np.float64) -> CSR:
     s = max(4, round(n_target ** (1 / 3)))
     rows, cols, vals, n = _stencil3d(s, s, s, dtype=dtype)
-    return csr_from_coo(rows, cols, vals, (n, n))
+    A = csr_from_coo(rows, cols, vals, (n, n))
+    # cell geometry for the 3-D block partitioner (a plain attribute:
+    # dropped by pytree round-trips and permute_csr, which is correct —
+    # a permuted operator has lost its lexicographic meaning)
+    A.grid = (s, s, s)
+    return A
 
 
 def _problem_aniso2d(n_target: int, dtype=np.float64) -> CSR:
@@ -100,9 +105,11 @@ def _problem_aniso2d(n_target: int, dtype=np.float64) -> CSR:
     add(idx[:-1, :], idx[1:, :], -1.0)
     add(idx[:, 1:], idx[:, :-1], -eps)
     add(idx[:, :-1], idx[:, 1:], -eps)
-    return csr_from_coo(
+    A = csr_from_coo(
         np.concatenate(rows), np.concatenate(cols), np.concatenate(vals), (n, n)
     )
+    A.grid = (s, s, 1)   # 2-D degenerate case of the block partitioner
+    return A
 
 
 def _problem_lung(n_target: int, dtype=np.float64) -> CSR:
@@ -142,7 +149,9 @@ def _problem_widerange(n_target: int, dtype=np.float64,
     idx = np.asarray(base.indices)
     row_ids = np.repeat(np.arange(n), np.diff(indptr))
     data = np.asarray(base.data) * d[row_ids] / d[idx]
-    return CSR(base.indptr, base.indices, jnp.asarray(data), base.shape)
+    A = CSR(base.indptr, base.indices, jnp.asarray(data), base.shape)
+    A.grid = base.grid   # scaling preserves the stencil's cell layout
+    return A
 
 
 def _problem_varcoef(n_target: int, dtype=np.float64, orders: int = 6) -> CSR:
@@ -166,7 +175,9 @@ def _problem_varcoef(n_target: int, dtype=np.float64, orders: int = 6) -> CSR:
     indptr = np.asarray(base.indptr)
     row_ids = np.repeat(np.arange(n), np.diff(indptr))
     data = np.asarray(base.data) * d[row_ids]
-    return CSR(base.indptr, base.indices, jnp.asarray(data), base.shape)
+    A = CSR(base.indptr, base.indices, jnp.asarray(data), base.shape)
+    A.grid = base.grid   # row scaling preserves the stencil's cell layout
+    return A
 
 
 def _stencil27_box(nx: int, ny: int, nz: int, dtype=np.float64) -> CSR:
@@ -228,7 +239,9 @@ def _problem_stencil27(n_target: int, dtype=np.float64) -> CSR:
     chunk at small n).
     """
     s = max(4, round(n_target ** (1 / 3)))
-    return _stencil27_box(s, s, s, dtype=dtype)
+    A = _stencil27_box(s, s, s, dtype=dtype)
+    A.grid = (s, s, s)
+    return A
 
 
 def _problem_unstructured(n_target: int, dtype=np.float64) -> CSR:
@@ -260,7 +273,9 @@ def _problem_stretched(n_target: int, dtype=np.float64) -> CSR:
     s = max(4, round(n_target ** (1 / 3)))
     rows, cols, vals, n = _stencil3d(s, s, s, wind=(1.5, 0.0, 0.0), diff=0.3,
                                      dtype=dtype)
-    return csr_from_coo(rows, cols, vals, (n, n))
+    A = csr_from_coo(rows, cols, vals, (n, n))
+    A.grid = (s, s, s)
+    return A
 
 
 PROBLEMS = {

@@ -30,6 +30,19 @@ provided, selected by :func:`partition_matvec`:
   works for any pytree operator with ``.matvec``; costs full-matrix memory
   and flops per device, so it is the fallback, not the default.
 
+* ``"block3d"`` — **3-D block partition, face exchange, overlapped**: the
+  plan's :class:`~repro.sparse.halo_probe.BlockPartition` assigns each
+  device a 3-D box of grid cells (2-D/1-D degenerate cases included), so
+  only the referenced faces/edges/corners travel —
+  O((s/P^{1/3})²) values per face on an s³ grid instead of the 1-D
+  strip's O(s²).  The local contraction is *split*: the face
+  ``ppermute``s (:func:`repro.dist.collectives.halo_exchange_3d`) are
+  issued first, then the interior rows (no remote deps, the first
+  ``n_local - n_boundary`` of the chunk) contract against the local chunk
+  alone, and only the boundary rows touch the exchange result — XLA's
+  latency-hiding scheduler can overlap the collective with the interior
+  work.
+
 Operator dims that do not divide the shard count are zero-padded up to the
 next multiple (padded rows carry val 0, padded operand entries are zeros,
 so the padded SpMV embeds the original exactly); callers pad their vectors
@@ -57,86 +70,26 @@ the local contraction kernels.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.collectives import halo_exchange
+from repro.dist.collectives import halo_exchange, halo_exchange_3d
 
-__all__ = ["HaloProbe", "halo_probe", "partition_matvec"]
+# probing/partition geometry grew into its own module; the canonical home
+# is repro.sparse.halo_probe — re-exported here for existing importers
+from repro.sparse.halo_probe import (  # noqa: F401
+    MAX_HALO_FRAC,
+    BlockPartition,
+    HaloProbe,
+    _bandwidth_of,
+    _ell_arrays,
+    block_partition,
+    halo_probe,
+)
 
-#: a halo this fraction of the (padded) vector or larger -> gather instead
-MAX_HALO_FRAC = 0.5
-
-
-@dataclasses.dataclass(frozen=True)
-class HaloProbe:
-    """Host-side bandwidth/halo geometry of one (operator, shard count).
-
-    ``strips`` are the per-hop exchange strip lengths (hop 1 first): every
-    strip but the last is a full chunk, and ``sum(strips) == bandwidth`` —
-    the one-sided halo width.  ``mode`` is the partition mode the probe
-    recommends: ``"halo"`` for banded operators whose two-sided halo stays
-    under :data:`MAX_HALO_FRAC` of the padded vector, ``"rows"`` for
-    wide/unstructured ELL-convertible operators, ``"replicated"`` when the
-    operator cannot be row-partitioned at all.
-    """
-
-    n: int              # logical operator dim
-    n_pad: int          # padded dim (multiple of n_shards)
-    n_local: int        # chunk length per shard
-    bandwidth: int      # max |col - row| over nonzeros (one-sided halo)
-    hops: int           # neighbor distance needed on each side
-    strips: tuple       # per-hop strip lengths, hop 1 first
-    mode: str           # recommended partition mode
-
-
-def _ell_arrays(A):
-    """(cols, vals) of an ELL view of ``A``; None if not convertible."""
-    if hasattr(A, "cols") and hasattr(A, "vals"):
-        return A.cols, A.vals
-    if hasattr(A, "to_ell"):
-        E = A.to_ell()
-        return E.cols, E.vals
-    return None
-
-
-def _bandwidth_of(A, ell) -> int:
-    if hasattr(A, "bandwidth"):
-        return A.bandwidth()
-    cols, vals = ell
-    live = np.asarray(vals) != 0
-    rows = np.arange(np.asarray(cols).shape[0])[:, None]
-    off = np.abs(np.asarray(cols) - rows)[live]
-    return int(off.max()) if off.size else 0
-
-
-def halo_probe(A, n_shards: int, *,
-               max_halo_frac: float = MAX_HALO_FRAC) -> HaloProbe:
-    """Probe ``A``'s column structure for neighbor-exchange viability.
-
-    Pure host work (numpy over the CSR/ELL index arrays); the result is
-    what :func:`partition_matvec` partitions by and what the wire-bytes
-    accounting (``benchmarks/shard_wire.py``) prices.
-    """
-    n = A.shape[0]
-    n_pad = -(-n // n_shards) * n_shards
-    n_local = n_pad // n_shards
-    ell = _ell_arrays(A)
-    if ell is None:
-        return HaloProbe(n=n, n_pad=n_pad, n_local=n_local, bandwidth=0,
-                         hops=0, strips=(), mode="replicated")
-    bw = _bandwidth_of(A, ell)
-    hops = -(-bw // n_local) if bw else 0
-    strips = tuple(
-        min(n_local, bw - (k - 1) * n_local) for k in range(1, hops + 1)
-    )
-    mode = "halo" if 2 * bw < max_halo_frac * n_pad else "rows"
-    return HaloProbe(n=n, n_pad=n_pad, n_local=n_local, bandwidth=bw,
-                     hops=hops, strips=strips, mode=mode)
+__all__ = ["BlockPartition", "HaloProbe", "block_partition", "halo_probe",
+           "partition_matvec"]
 
 
 def _validate_mesh(mesh, axis_name: str, n_shards: int):
@@ -173,11 +126,17 @@ def partition_matvec(A=None, n_shards: int | None = None,
 
     ``mode``: ``"auto"`` follows the probe (halo for banded operators,
     gathered rows for wide/unstructured ones, replicated for bare
-    matvec-only operators); ``"halo"``/``"rows"``/``"replicated"`` force a
-    path — except that ``"halo"`` still falls back to the gathered-operand
+    matvec-only operators — and the 3-D block partition when the operator
+    carries cell geometry and its modelled face wire wins);
+    ``"halo"``/``"rows"``/``"replicated"``/``"block3d"`` force a path —
+    except that ``"halo"`` still falls back to the gathered-operand
     contraction when the probe finds the two-sided halo would be ≥
     ``MAX_HALO_FRAC`` of the vector (the exchange would move more than the
     gather).  The executed path is reported on ``local_matvec.mode``.
+    ``"block3d"`` requires the plan's block layout: vectors must enter
+    through :meth:`OperatorPlan.embed` (the layout interleaves pad slots
+    inside chunks), and the contraction overlaps the face exchange with
+    the interior rows.
 
     When the operator dim does not divide ``n_shards`` the operator rows
     are zero-padded to ``probe.n_pad``; pad the operand vectors to match
@@ -231,6 +190,37 @@ def partition_matvec(A=None, n_shards: int | None = None,
         if compressed_halo:
             def exact_matvec(op, x_local):
                 return _halo_matvec(op, x_local, False)
+
+    elif mode == "block3d":
+        blk = plan.block
+        operand = (jnp.asarray(blk.lcols, jnp.int32),
+                   jnp.asarray(blk.vals),
+                   tuple(jnp.asarray(ix, jnp.int32) for ix in blk.send_idx))
+        in_specs = (P(axis_name, None), P(axis_name, None),
+                    tuple(P(axis_name, None) for _ in blk.send_idx))
+        rounds = blk.rounds
+        ni = n_local - blk.n_boundary
+
+        def _block3d_matvec(op, x_local, compressed):
+            lcols_l, vals_l, send = op
+            # issue the face ppermutes first, then contract the interior
+            # rows (purely local by layout) so XLA can overlap them with
+            # the in-flight exchange; only boundary rows read x_ext
+            x_ext = halo_exchange_3d(x_local, tuple(ix[0] for ix in send),
+                                     rounds, axis_name,
+                                     compressed=compressed)
+            y_int = (vals_l[:ni]
+                     * x_local[lcols_l[:ni]].astype(vals_l.dtype)).sum(axis=1)
+            y_bnd = (vals_l[ni:]
+                     * x_ext[lcols_l[ni:]].astype(vals_l.dtype)).sum(axis=1)
+            return jnp.concatenate([y_int, y_bnd])
+
+        def local_matvec(op, x_local):
+            return _block3d_matvec(op, x_local, compressed_halo)
+
+        if compressed_halo:
+            def exact_matvec(op, x_local):
+                return _block3d_matvec(op, x_local, False)
 
     elif mode == "rows":
         cols, vals = plan.ell_padded()

@@ -1,0 +1,360 @@
+"""3-D block partitioning + overlapped face exchange (ISSUE 7).
+
+Host-side (no multi-device mesh needed): process-grid factorization, the
+block layout's invariants (interior rows reference only local columns —
+the comm/compute overlap contract), exact partition → face-exchange →
+un-partition parity against the dense reference via a pure-numpy
+emulation of the exchange schedule, plan caching keyed by the process
+grid, and the unified wire accounting (1-D strips, 3-D faces, and the
+gathered fallback all price through ``OperatorPlan.matvec_wire_bytes`` /
+``exchange_bytes``; a monkeypatched ``ppermute`` recorder pins the model
+to the actual collective operand sizes).  The 8-device driver parity runs
+in ``tests/test_halo_matvec.py``'s subprocess.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.dist.collectives import (
+    exchange_bytes,
+    gather_bytes,
+    halo_bytes,
+    halo_exchange,
+    halo_exchange_3d,
+)
+from repro.sparse import (
+    block_partition,
+    factor_pgrid,
+    grid_of,
+    make_problem,
+    plan_operator,
+)
+from repro.sparse.csr import csr_from_coo
+from repro.sparse.halo_probe import candidate_pgrids
+from repro.sparse.problems import _stencil27_box
+from repro.sparse.reorder import permute_csr, rcm_permutation
+
+
+def _emulate_block_matvec(blk, x):
+    """Pure-numpy emulation of the sharded block3d matvec: embed into the
+    block layout, run the exchange schedule round by round, contract the
+    localized ELL, un-permute.  Mirrors ``partition_matvec``'s device code
+    exactly — what the property test checks against the dense reference."""
+    P = blk.pgrid[0] * blk.pgrid[1] * blk.pgrid[2]
+    nl = blk.n_local
+    xp = np.zeros(blk.n_pad)
+    xp[: blk.n] = x
+    x_loc = xp[blk.perm].reshape(P, nl)            # embed: perm[new] = old
+    ext = [x_loc]
+    for idx, pairs in zip(blk.send_idx, blk.rounds):
+        buf = np.zeros((P, idx.shape[1]))
+        for src, dst in pairs:                     # one ppermute per round
+            buf[dst] = x_loc[src, idx[src]]
+        ext.append(buf)
+    x_ext = np.concatenate(ext, axis=1)            # [chunk | recv_0 | ...]
+    lcols = blk.lcols.reshape(P, nl, -1)
+    vals = blk.vals.reshape(P, nl, -1)
+    y_loc = np.stack([
+        (vals[p] * x_ext[p][lcols[p]]).sum(axis=1) for p in range(P)
+    ])
+    y_pad = np.empty(blk.n_pad)
+    y_pad[blk.perm] = y_loc.reshape(-1)            # extract: un-permute
+    return y_pad[: blk.n]
+
+
+def _check_partition(A, P, pgrid=None, tol=1e-13):
+    blk = block_partition(A, P, pgrid=pgrid)
+    n = A.shape[0]
+    # the layout is a permutation of the padded index space
+    assert np.array_equal(np.sort(blk.perm), np.arange(blk.n_pad))
+    # rounds: sources and destinations disjoint within each round
+    for pairs in blk.rounds:
+        srcs = [s for s, _ in pairs]
+        dsts = [d for _, d in pairs]
+        assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
+    # interior rows reference only local columns (the overlap invariant)
+    nl, nb = blk.n_local, blk.n_boundary
+    lcols = blk.lcols.reshape(P, nl, -1)
+    assert (lcols[:, : nl - nb] < nl).all()
+    # matvec parity vs the dense reference
+    x = np.random.default_rng(n).standard_normal(n)
+    y_ref = np.asarray(A @ jnp.asarray(x))
+    y = _emulate_block_matvec(blk, x)
+    scale = max(np.abs(y_ref).max(), 1.0)
+    assert np.abs(y - y_ref).max() / scale < tol, (P, blk.pgrid)
+    return blk
+
+
+# ---------------------------------------------------------------------------
+# process-grid factorization
+# ---------------------------------------------------------------------------
+
+
+def test_factor_pgrid_geometry():
+    # cubic grid, cubic process grid
+    assert factor_pgrid(8, (8, 8, 8)) == (2, 2, 2)
+    # 2-D grid: Pz forced to 1
+    assert factor_pgrid(4, (16, 16, 1)) == (2, 2, 1)
+    # 1-D chain (unstructured fallback geometry): contiguous row split
+    assert factor_pgrid(8, (64, 1, 1)) == (8, 1, 1)
+    # every candidate is an exact factorization that fits the grid
+    for pg in candidate_pgrids(8, (8, 4, 2)):
+        assert pg[0] * pg[1] * pg[2] == 8
+        assert all(p <= g for p, g in zip(pg, (8, 4, 2)))
+
+
+def test_factor_pgrid_scores_actual_wire():
+    """The factorization is scored by the packed exchange wire, not a
+    face-surface proxy: on the 13^3 stencil at P=8 the proxy would pick
+    (1, 2, 4) (286 surface < 294) but (2, 2, 2) ships fewer values."""
+    A, _ = make_problem("synth:stencil27", 2048)       # 13^3
+    assert factor_pgrid(8, grid_of(A), A=A) == (2, 2, 2)
+    w222 = sum(block_partition(A, 8, pgrid=(2, 2, 2)).wire_sizes)
+    w124 = sum(block_partition(A, 8, pgrid=(1, 2, 4)).wire_sizes)
+    assert w222 < w124
+
+
+def test_pgrid_validation():
+    A = _stencil27_box(5, 5, 5)
+    A.grid = (5, 5, 5)
+    with pytest.raises(ValueError, match="cannot factor"):
+        candidate_pgrids(8, (3, 1, 1))                 # no factoring fits
+    with pytest.raises(ValueError, match="8 shards"):
+        block_partition(A, 8, pgrid=(2, 2, 1))         # product mismatch
+    with pytest.raises(ValueError, match="exceeds the cell grid"):
+        block_partition(A, 8, pgrid=(1, 1, 8))         # 8 boxes on 5 cells
+    with pytest.raises(ValueError, match="3 positive ints"):
+        block_partition(A, 8, pgrid=(8, 1))
+
+    class MatvecOnly:
+        shape = (64, 64)
+
+        def matvec(self, x):
+            return x
+
+    with pytest.raises(ValueError, match="ELL-convertible"):
+        block_partition(MatvecOnly(), 8)
+
+
+# ---------------------------------------------------------------------------
+# geometry: faces beat strips
+# ---------------------------------------------------------------------------
+
+
+def test_face_wire_beats_strip_wire_on_stencil27():
+    """The tentpole claim, pinned without devices: on the 13^3 27-point
+    stencil at P=8 the (2,2,2) block partition ships O((s/2)^2) faces —
+    under half the 1-D layout's two O(s^2) bandwidth strips."""
+    A, _ = make_problem("synth:stencil27", 2048)       # s = 13, bw = 183
+    plan = plan_operator(A, 8, reorder="none")
+    assert plan.matvec_mode == "block3d"               # auto adopts it
+    blk = plan.block
+    assert blk.pgrid == (2, 2, 2) and blk.order == "grid"
+    w3 = sum(blk.wire_sizes)
+    w1 = 2 * plan.probe.bandwidth
+    assert w3 == 169 and w1 == 366
+    assert w3 < 0.5 * w1
+    # the plan prices both through the same audited helper
+    assert plan.matvec_wire_bytes() == exchange_bytes(blk.wire_sizes)
+    assert plan.matvec_wire_bytes() < 0.5 * halo_bytes(plan.probe.strips)
+
+
+def test_block_partition_exact_on_stencil():
+    A, _ = make_problem("synth:stencil27", 343)        # 7^3 over 8
+    blk = _check_partition(A, 8)
+    assert blk.pgrid == (2, 2, 2)
+    assert blk.n_pad % 8 == 0 and blk.n_pad >= A.shape[0]
+
+
+def test_block_partition_exact_odd_size():
+    # 5*5*3 = 75 cells over 8 devices: n % P != 0, uneven boxes, pads
+    A = _stencil27_box(5, 5, 3)
+    A.grid = (5, 5, 3)
+    _check_partition(A, 8)
+
+
+def test_block_partition_unstructured_fallback():
+    """No geometry: the cells form an RCM-ordered 1-D chain; the exchange
+    still ships only the referenced ghosts, and stays exact."""
+    A, _ = make_problem("synth:unstructured", 512)
+    blk = _check_partition(A, 8)
+    assert blk.order == "rcm" and blk.grid == (A.shape[0], 1, 1)
+    # already-banded operators keep their order
+    Ab = permute_csr(A, rcm_permutation(A))
+    blk_b = _check_partition(Ab, 8)
+    assert blk_b.order == "identity"
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_block3d_matvec_property(seed):
+    """partition -> face-exchange matvec -> un-partition is exact f64
+    against the dense reference for random grids, shard counts, process
+    grids (including forced non-auto ones), odd sizes, and both gridded
+    and RCM-fallback orderings."""
+    rng = np.random.default_rng(seed)
+    P = int(rng.choice([2, 4, 8]))
+    if rng.integers(2):
+        # gridded: random box, dims >= 2 so some (Px,Py,Pz) fits
+        dims = tuple(int(d) for d in rng.integers(2, 7, 3))
+        A = _stencil27_box(*dims)
+        A.grid = dims
+        try:
+            pgs = candidate_pgrids(P, dims)
+        except ValueError:
+            return                                      # nothing fits: skip
+        pgrid = pgs[int(rng.integers(len(pgs)))] if rng.integers(2) else None
+    else:
+        # unstructured: scattered couplings, no geometry attribute
+        n = int(rng.integers(40, 160))
+        k = 4 * n
+        ri, ci = rng.integers(0, n, k), rng.integers(0, n, k)
+        off = np.unique(np.stack([ri, ci]), axis=1)
+        off = off[:, off[0] != off[1]]
+        v = rng.uniform(-1.0, 1.0, off.shape[1])
+        d = np.arange(n)
+        diag = np.full(n, 2.0)
+        np.add.at(diag, off[0], np.abs(v))
+        A = csr_from_coo(np.concatenate([off[0], d]),
+                         np.concatenate([off[1], d]),
+                         np.concatenate([v, diag]), (n, n))
+        pgrid = None
+    _check_partition(A, P, pgrid=pgrid)
+
+
+# ---------------------------------------------------------------------------
+# planning: auto arbitration, cache keyed on the process grid
+# ---------------------------------------------------------------------------
+
+
+def test_plan_auto_adopts_block3d_only_when_it_wins():
+    As, _ = make_problem("synth:stencil27", 2048)
+    p = plan_operator(As, 8)
+    assert p.matvec_mode == "block3d" and p.pgrid == (2, 2, 2)
+    assert "block3d" in p.describe() and "2x2x2" in p.describe()
+    # no geometry and no forced pgrid: auto never considers block3d
+    Au, _ = make_problem("synth:lung", 512)
+    assert grid_of(Au) is None
+    assert plan_operator(Au, 8).matvec_mode in ("halo", "rows")
+    # unsharded: nothing to exchange
+    assert plan_operator(As, 1).matvec_mode != "block3d"
+    # opt-out restores the 1-D arbitration
+    p1d = plan_operator(As, 8, allow_block3d=False)
+    assert p1d.matvec_mode == "halo"
+
+
+def test_plan_cache_hit_keyed_on_pgrid():
+    """Mirror of test_reorder's content-hit: rebuilding the same problem
+    reuses the block3d plan, and the key includes the forced process
+    grid — two factorizations of the same operator are distinct plans."""
+    A1, _ = make_problem("synth:stencil27", 512)       # 8^3
+    p1 = plan_operator(A1, 8, matvec_mode="block3d")
+    A2, _ = make_problem("synth:stencil27", 512)
+    assert A2 is not A1
+    assert plan_operator(A2, 8, matvec_mode="block3d") is p1
+    p_forced = plan_operator(A1, 8, matvec_mode="block3d", pgrid=(1, 2, 4))
+    assert p_forced is not p1 and p_forced.pgrid == (1, 2, 4)
+    assert plan_operator(A2, 8, matvec_mode="block3d",
+                         pgrid=(1, 2, 4)) is p_forced
+    # same content, different factorization: genuinely different schedule
+    assert p_forced.block.wire_sizes != p1.block.wire_sizes
+
+
+def test_embed_extract_roundtrip():
+    A, _ = make_problem("synth:stencil27", 343)        # 7^3: n % 8 != 0
+    plan = plan_operator(A, 8, matvec_mode="block3d")
+    n = A.shape[0]
+    v = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    ve = plan.embed(v)
+    assert ve.shape == (plan.n_pad,)
+    np.testing.assert_array_equal(np.asarray(plan.extract(ve)),
+                                  np.asarray(v))
+    # batched vectors embed along the last axis
+    V = jnp.stack([v, 2.0 * v])
+    VE = plan.embed(V)
+    assert VE.shape == (2, plan.n_pad)
+    np.testing.assert_array_equal(np.asarray(plan.extract(VE)),
+                                  np.asarray(V))
+
+
+def test_jacobi_permuted_through_padded_block_layout():
+    from repro.solver.pipeline import JacobiPreconditioner
+
+    A, _ = make_problem("synth:stencil27", 343)        # padded layout
+    plan = plan_operator(A, 8, matvec_mode="block3d")
+    n = A.shape[0]
+    pre = JacobiPreconditioner.from_operator(A)
+    local = pre.permuted(plan.perm)
+    assert local.inv_diag.shape == (plan.n_pad,)
+    # pad slots are identity; real slots follow the permutation
+    pad_mask = np.asarray(plan.perm) >= n
+    np.testing.assert_allclose(np.asarray(local.inv_diag)[pad_mask], 1.0)
+    np.testing.assert_allclose(
+        np.asarray(local.inv_diag)[~pad_mask],
+        np.asarray(pre.inv_diag)[np.asarray(plan.perm)[~pad_mask]])
+
+
+# ---------------------------------------------------------------------------
+# unified wire accounting
+# ---------------------------------------------------------------------------
+
+
+def test_wire_accounting_single_audited_path():
+    """1-D strips, 3-D faces, and the gathered fallback all report through
+    exchange_bytes/gather_bytes via the plan method — the satellite that
+    keeps benchmark and solver from drifting apart."""
+    A, _ = make_problem("synth:stencil27", 2048)
+    ph = plan_operator(A, 8, matvec_mode="halo")
+    pb = plan_operator(A, 8, matvec_mode="block3d")
+    pr = plan_operator(A, 8, matvec_mode="rows")
+    # halo_bytes is exchange_bytes of each strip sent twice
+    strips = ph.probe.strips
+    assert halo_bytes(strips) == exchange_bytes(tuple(strips) * 2)
+    assert ph.matvec_wire_sizes() == tuple(strips) * 2
+    assert ph.matvec_wire_bytes() == halo_bytes(strips)
+    assert pb.matvec_wire_sizes() == pb.block.wire_sizes
+    assert pb.matvec_wire_bytes() == exchange_bytes(pb.block.wire_sizes)
+    assert pr.matvec_wire_sizes() is None
+    assert pr.matvec_wire_bytes() == gather_bytes(pr.n_local, 8)
+    # compressed transport pays FRSZ2 whole-block granularity per buffer
+    assert (pb.matvec_wire_bytes(compressed=True)
+            == exchange_bytes(pb.block.wire_sizes, compressed=True))
+
+    class MatvecOnly:
+        shape = (64, 64)
+
+        def matvec(self, x):
+            return x
+
+    assert plan_operator(MatvecOnly(), 8).matvec_wire_bytes() == 0
+
+
+def test_wire_model_matches_ppermute_operands(monkeypatch):
+    """White-box: the modelled bytes equal the actual ppermute operand
+    sizes, for both the 1-D strip exchange and the 3-D face exchange.
+    ``ppermute`` is replaced by an identity recorder, so the exchanges run
+    without any mesh and every value that would cross the wire is
+    counted."""
+    import jax
+
+    A, _ = make_problem("synth:stencil27", 2048)
+    sent = []
+    monkeypatch.setattr(
+        jax.lax, "ppermute",
+        lambda x, axis_name, perm: (sent.append(int(np.prod(x.shape))), x)[1])
+
+    ph = plan_operator(A, 8, matvec_mode="halo")
+    x = jnp.zeros(ph.n_local)
+    halo_exchange(x, ph.probe.strips, 8, "ax")
+    assert sum(sent) * 8 == ph.matvec_wire_bytes()
+
+    sent.clear()
+    pb = plan_operator(A, 8, matvec_mode="block3d")
+    blk = pb.block
+    xb = jnp.zeros(pb.n_local)
+    halo_exchange_3d(xb, tuple(jnp.asarray(ix[0]) for ix in blk.send_idx),
+                     blk.rounds, "ax")
+    assert sent == list(blk.wire_sizes)
+    assert sum(sent) * 8 == pb.matvec_wire_bytes()
