@@ -426,11 +426,11 @@ class ShardedFormat(StorageFormat):
         return self.reduce_partials(local).astype(arith_dtype)
 
     def reduce_partials(self, x):
-        if self.compressed_transport:
-            from repro.dist.collectives import compressed_psum
+        from repro.dist import collectives
 
-            return compressed_psum(x, self.axis_name)
-        return jax.lax.psum(x, self.axis_name)
+        if self.compressed_transport:
+            return collectives.compressed_psum(x, self.axis_name)
+        return collectives.psum(x, self.axis_name)
 
     def combine(self, store, h, arith_dtype, n: int):
         return self.inner.combine(store, h, arith_dtype, n)
