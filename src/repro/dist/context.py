@@ -21,11 +21,10 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
-# importing collectives installs the jax.shard_map forward-compat shim
-from repro.dist import collectives as _collectives  # noqa: F401
+# also installs the jax.shard_map forward-compat shim on import
+from repro.dist import collectives as _collectives
 
 __all__ = ["DistContext", "LOCAL"]
 
@@ -52,10 +51,9 @@ class DistContext:
         if self.axis_name is None:
             return x
         if self.compressed_norms:
-            from repro.dist.collectives import compressed_psum
-
-            return compressed_psum(x, self.axis_name).astype(x.dtype)
-        return jax.lax.psum(x, self.axis_name)
+            return _collectives.compressed_psum(
+                x, self.axis_name).astype(x.dtype)
+        return _collectives.psum(x, self.axis_name)
 
     def norm(self, x):
         """||x|| of the (possibly row-partitioned) vector ``x``."""
