@@ -74,7 +74,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.collectives import halo_exchange, halo_exchange_3d
+from repro.dist.collectives import (
+    gather_operand,
+    halo_exchange,
+    halo_exchange_3d,
+)
 
 # probing/partition geometry grew into its own module; the canonical home
 # is repro.sparse.halo_probe — re-exported here for existing importers
@@ -229,7 +233,7 @@ def partition_matvec(A=None, n_shards: int | None = None,
 
         def local_matvec(op, x_local):
             cols_l, vals_l = op                       # (n_local, w) each
-            x = jax.lax.all_gather(x_local, axis_name, tiled=True)
+            x = gather_operand(x_local, axis_name)
             return (vals_l * x[cols_l].astype(vals_l.dtype)).sum(axis=1)
 
     else:  # replicated
@@ -240,7 +244,7 @@ def partition_matvec(A=None, n_shards: int | None = None,
 
         def local_matvec(op, x_local):
             A_full, rid = op
-            x = jax.lax.all_gather(x_local, axis_name, tiled=True)
+            x = gather_operand(x_local, axis_name)
             y = (A_full.matvec(x[:n], row_ids=rid) if rid is not None
                  else A_full.matvec(x[:n]))
             if pad:
