@@ -67,6 +67,7 @@ from repro.solver.gmres import (
     _block_apply_prior,
     _block_solve_and_update,
     _block_triangularize,
+    _cached_host_kernels,
     _cycle_row_reads,
     _lru_cached,
     _operator_key,
@@ -343,7 +344,8 @@ def _block_results(state) -> list[GmresResult]:
 
 
 def _gmres_block_host(matvec, accs, policy, B, m, max_iters, target_rrn,
-                      eta, ortho, precond, X0=None) -> list[GmresResult]:
+                      eta, ortho, precond, X0=None, op_key=None,
+                      pins=()) -> list[GmresResult]:
     """Python restart loop mirroring ``_block_device_solve_fn``
     decision-for-decision (same jitted cycle, numpy restart logic)."""
     ad = accs[0].arith_dtype
@@ -354,13 +356,26 @@ def _gmres_block_host(matvec, accs, policy, B, m, max_iters, target_rrn,
     bn_safe = jnp.maximum(jnp.linalg.norm(B, axis=1), _TINY)
     X = jnp.zeros_like(B) if X0 is None else X0.astype(ad)
 
+    # ``bn_safe`` is a jit argument, not a closure constant — see
+    # _gmres_host: a closed-over per-solve array would recompile the cycle
+    # for every new right-hand-side block.
     def make_cycle(acc):
-        return jax.jit(lambda store, W0: _block_cycle(
-            bmv, acc, bn_safe, store, W0, eta, target_rrn, ortho, precond))
+        return jax.jit(lambda store, W0, bn: _block_cycle(
+            bmv, acc, bn, store, W0, eta, target_rrn, ortho, precond))
 
     def make_update(acc):
         return jax.jit(lambda store, R, G, j_stop, X_: _block_solve_and_update(
             acc, store, R, G, j_stop, X_, precond))
+
+    def kernels_for(lvl):
+        acc = accs[lvl]
+        tail = ("block", lvl, acc.p, policy.spec(), ortho.spec(),
+                precond.spec(), acc.m, acc.n,
+                jnp.dtype(acc.arith_dtype).name, float(eta),
+                float(target_rrn))
+        return _cached_host_kernels(
+            op_key, pins, tail,
+            lambda: (make_cycle(acc), make_update(acc)))
 
     kernels: dict[int, tuple] = {}
     stores: dict[int, Any] = {}
@@ -390,11 +405,11 @@ def _gmres_block_host(matvec, accs, policy, B, m, max_iters, target_rrn,
         lvl = int(policy.level(float(np.max(np.where(active, rr, 0.0))),
                                cycles))
         if lvl not in kernels:
-            kernels[lvl] = (make_cycle(accs[lvl]), make_update(accs[lvl]))
+            kernels[lvl] = kernels_for(lvl)
             stores[lvl] = accs[lvl].empty()
         cycle, update = kernels[lvl]
         W0 = jnp.where(jnp.asarray(active)[:, None], R0v, 0.0)
-        stores[lvl], R, G, est, extra_rows = cycle(stores[lvl], W0)
+        stores[lvl], R, G, est, extra_rows = cycle(stores[lvl], W0, bn_safe)
         est_np = np.asarray(est)
         col_hit = est_np <= target_rrn
         all_hit = col_hit.all(axis=1)
@@ -539,8 +554,10 @@ def gmres_block(
     B = B.astype(arith_dtype)
 
     if driver == "host":
+        op_key, pins = _operator_key(A, user_matvec, plan)
         results = _gmres_block_host(matvec, accs, policy, B, m, max_iters,
-                                    target_rrn, eta, ortho, precond, X0=X0)
+                                    target_rrn, eta, ortho, precond, X0=X0,
+                                    op_key=op_key, pins=pins + (precond,))
     elif driver != "device":
         raise ValueError(f"unknown driver {driver!r}; "
                          f"expected one of ('device', 'host')")
@@ -554,3 +571,22 @@ def gmres_block(
         for r in results:
             r.x = plan.unpermute(r.x)
     return results
+
+
+def build_block_solve(A, B, *, storage=None, policy=None, precond=None,
+                      ortho="mgs", m: int = 30, max_iters: int = 2000,
+                      target_rrn: float = 1e-10, arith_dtype=None,
+                      eta: float = 0.7071067811865475, matvec=None):
+    """Un-jitted ``(B, X0) -> state`` block solve plus accessors.
+
+    The block-driver counterpart of
+    :func:`repro.solver.gmres.build_device_solve`: the jaxpr/eval_shape
+    surface the trace audit checks
+    :func:`repro.dist.sharding.block_driver_partition_specs` against.
+    """
+    accs, policy, _, matvec, precond, ortho = _resolve_block(
+        A, B, storage, policy, m, arith_dtype, matvec, precond, ortho,
+        target_rrn)
+    solve = _block_device_solve_fn(matvec, accs, policy, m, max_iters, eta,
+                                   target_rrn, ortho, precond)
+    return solve, accs

@@ -436,16 +436,20 @@ def _permuted_precond(precond, plan):
 
 
 def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
-                ortho, precond, x0=None) -> GmresResult:
+                ortho, precond, x0=None, op_key=None, pins=()) -> GmresResult:
     arith_dtype = accs[0].arith_dtype
     b = b.astype(arith_dtype)
     b_norm = jnp.linalg.norm(b)
     x = jnp.zeros_like(b) if x0 is None else x0.astype(arith_dtype)
 
+    # ``b_norm`` rides as a jit *argument*: closing over it would bake the
+    # per-solve array into the trace as a constant, recompiling the cycle
+    # for every new right-hand side (the retrace class the trace audit
+    # gates on).
     def make_cycle(acc):
         return jax.jit(
-            lambda store, w0, beta: _cycle(
-                matvec, acc, b_norm, store, w0, beta, eta, target_rrn,
+            lambda store, w0, beta, b_norm_: _cycle(
+                matvec, acc, b_norm_, store, w0, beta, eta, target_rrn,
                 ortho, precond
             )
         )
@@ -456,6 +460,15 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
                 acc, store, R, g, j_stop, x0_, precond
             )
         )
+
+    def kernels_for(lvl):
+        acc = accs[lvl]
+        tail = (lvl, policy.spec(), ortho.name, precond.spec(), acc.m,
+                acc.n, jnp.dtype(acc.arith_dtype).name, float(eta),
+                float(target_rrn))
+        return _cached_host_kernels(
+            op_key, pins, tail,
+            lambda: (make_cycle(acc), make_update(acc)))
 
     # per-policy-level jitted kernels + stores, built on first use
     kernels: dict[int, tuple] = {}
@@ -489,10 +502,11 @@ def _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn, eta,
             break
         lvl = int(policy.level(restart_rrns[-1], len(restart_rrns) - 1))
         if lvl not in kernels:
-            kernels[lvl] = (make_cycle(accs[lvl]), make_update(accs[lvl]))
+            kernels[lvl] = kernels_for(lvl)
             stores[lvl] = accs[lvl].empty()
         cycle, update = kernels[lvl]
-        stores[lvl], R, g, est, extra_rows = cycle(stores[lvl], r, beta)
+        stores[lvl], R, g, est, extra_rows = cycle(stores[lvl], r, beta,
+                                                   b_norm)
         est_np = np.asarray(est)
         # first inner iteration that met the target (1-based count)
         hit = np.nonzero(est_np <= target_rrn)[0]
@@ -704,6 +718,35 @@ def _device_result(state) -> GmresResult:
 _SOLVE_CACHE: OrderedDict = OrderedDict()
 _SOLVE_CACHE_SIZE = 16
 
+# jitted cycle/update kernels for the *host*-looped drivers, shared by the
+# scalar (_gmres_host) and block (_gmres_block_host) parity oracles.  The
+# seed drivers re-jitted these every solve, so repeated solves of the same
+# problem recompiled from scratch — the retrace class the trace audit
+# (python -m repro.analysis --check) now gates.
+_HOST_KERNEL_CACHE: OrderedDict = OrderedDict()
+_HOST_KERNEL_CACHE_SIZE = 32
+
+
+def _cached_host_kernels(op_key, pins, key_tail, build):
+    """Memoize one policy level's host-driver kernels.
+
+    ``op_key`` is the operator's content key from :func:`_operator_key`
+    (``None`` disables caching — the kernels are built per call, the seed
+    behaviour); ``key_tail`` carries the pipeline identity; ``pins`` keeps
+    id()-keyed objects alive for as long as the entry lives.
+    """
+
+    def make_key():
+        if op_key is None:
+            raise TypeError("uncacheable operator")
+        return ("host", op_key) + tuple(key_tail)
+
+    def build_entry():
+        return build(), pins
+
+    return _lru_cached(_HOST_KERNEL_CACHE, _HOST_KERNEL_CACHE_SIZE,
+                       make_key, build_entry)[0]
+
 
 def _operator_key(A, user_matvec, plan=None):
     """Content-based key for the operator, plus any objects to pin.
@@ -869,8 +912,10 @@ def gmres(
     b = b.astype(arith_dtype)
 
     if driver == "host":
+        op_key, pins = _operator_key(A, user_matvec, plan)
         res = _gmres_host(matvec, accs, policy, b, m, max_iters, target_rrn,
-                          eta, ortho, precond, x0=x0)
+                          eta, ortho, precond, x0=x0, op_key=op_key,
+                          pins=pins + (precond,))
     elif driver != "device":
         raise ValueError(f"unknown driver {driver!r}")
     else:
@@ -1003,3 +1048,27 @@ def gmres_batched(
 def cb_gmres(A, b, storage="frsz2_32", **kw) -> GmresResult:
     """Compressed-Basis GMRES: GMRES with a non-native storage format."""
     return gmres(A, b, storage=storage, **kw)
+
+
+def build_device_solve(A, b, *, storage=None, policy=None, precond=None,
+                       ortho="mgs", m: int = 30, max_iters: int = 2000,
+                       target_rrn: float = 1e-10, arith_dtype=None,
+                       eta: float = 0.7071067811865475, matvec=None):
+    """Resolve the pipeline and return the un-jitted ``(b, x0) -> state``
+    device solve plus its accessors — the introspection surface.
+
+    ``jax.make_jaxpr(solve)(b, x0)`` exposes the whole device-resident
+    restart loop (the cycle jaxpr included) for structural audits:
+    ``repro.analysis.traceaudit`` walks it for f64 leaks in
+    compressed-format policies and checks the
+    :func:`repro.dist.sharding.driver_partition_specs` tree against the
+    actual ``lax.while_loop`` state via ``jax.eval_shape``.  Semantics are
+    identical to ``gmres(..., driver="device")`` minus jit, caching, and
+    result trimming.
+    """
+    accs, policy, _, matvec, precond, ortho = _resolve(
+        A, b, storage, policy, m, arith_dtype, matvec, precond, ortho,
+        target_rrn)
+    solve = _device_solve_fn(matvec, accs, policy, m, max_iters, eta,
+                             target_rrn, ortho, precond)
+    return solve, accs
