@@ -206,7 +206,11 @@ def _solve_and_update(acc: BasisAccessor, store, R, g, j_stop, x0, precond):
     active = idx < j_stop
     # Back substitution on the leading (j_stop, j_stop) block of R.
     Rm = jnp.where(active[None, :] & active[:, None], R[:m, :m], 0.0)
-    Rm = Rm + jnp.where(jnp.eye(m, dtype=bool) & ~active[:, None], 1.0, 0.0)
+    # anchor the fill literals to the arithmetic dtype: a bare
+    # where(mask, 1.0, 0.0) has no array operand and materializes the
+    # full (m, m) select in weak f64 under x64
+    Rm = Rm + jnp.where(jnp.eye(m, dtype=bool) & ~active[:, None],
+                        jnp.ones((), ad), jnp.zeros((), ad))
     gm = jnp.where(active, g[:m], 0.0)
 
     def back(i, y):
@@ -349,7 +353,9 @@ def _block_solve_and_update(acc, store, R, G, j_stop, X0, precond):
     diag_ok = jnp.abs(jnp.diagonal(Rm)) > _TINY
     solved = active & diag_ok
     eye = jnp.eye(mp, dtype=bool)
-    Rm = Rm + jnp.where(eye & ~solved[:, None], 1.0, 0.0)
+    # typed fill literals — see the note in _solve_and_update
+    Rm = Rm + jnp.where(eye & ~solved[:, None],
+                        jnp.ones((), ad), jnp.zeros((), ad))
     Gm = jnp.where(active[:, None], G[:mp], 0.0)
 
     def back(i, Y):
