@@ -1,0 +1,32 @@
+"""repro.analysis — JAX-aware static analysis + trace audit (jaxlint).
+
+Two stages gate every PR (CI runs ``python -m repro.analysis --check``):
+
+* **Stage 1 — AST lint** (:mod:`repro.analysis.astlint`): taint-tracks
+  traced function arguments through assignments and flags host syncs,
+  hard-coded f64, while_loop carry fields dropped on one branch, and raw
+  collectives outside :mod:`repro.dist.collectives`.
+
+* **Stage 2 — trace audit** (:mod:`repro.analysis.traceaudit`): compiles
+  the host/device/block (and, in a subprocess with 8 emulated devices,
+  sharded) drivers on tiny problems and asserts zero retraces on a
+  repeated same-shape solve, partition-spec/state pytree agreement, an
+  f64-free compressed-format cycle jaxpr, and a clean
+  ``jax.transfer_guard("disallow")`` sweep.
+
+Rules, allowlist pragmas, and the per-rule institutional memory live in
+:mod:`repro.analysis.rules`.
+"""
+from repro.analysis.astlint import lint_file, lint_paths, lint_source
+from repro.analysis.report import Finding, format_findings
+from repro.analysis.rules import RULES, Rule
+
+__all__ = [
+    "RULES",
+    "Finding",
+    "Rule",
+    "format_findings",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+]

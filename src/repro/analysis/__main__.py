@@ -1,0 +1,168 @@
+"""CLI for the jaxlint gate: ``python -m repro.analysis --check``.
+
+Modes
+-----
+
+``--check`` (default)
+    Stage 1 AST lint over the full tree, then the stage 2 trace audits:
+    host/device/block drivers in-process, the sharded driver in a child
+    process re-exec'd with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (device count is fixed at jax import time, so the parent cannot set it
+    for itself).  Exit 0 iff no findings.
+``--lint-only`` / ``--audit-only``
+    Run one stage.  ``--paths`` restricts the lint to specific files or
+    directories; ``--no-sharded`` skips the subprocess audit.
+``--list-rules``
+    Print the rule table with the institutional-memory rationale.
+
+Determinism: the audits pin ``repro.kernels.ops.INTERPRET = True``
+themselves, and the sharded child is spawned with ``REPRO_INTERPRET``
+scrubbed from its environment, so results do not depend on the caller's
+shell.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis.astlint import lint_paths
+from repro.analysis.report import Finding, format_findings
+from repro.analysis.rules import RULES
+
+#: directories linted by default, relative to the repo root.
+LINT_ROOTS = ("src", "tests", "benchmarks")
+
+_CHILD_PREFIX = "JAXLINT-FINDINGS:"
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root is three levels above src
+    return Path(__file__).resolve().parents[3]
+
+
+def _default_lint_paths() -> list[str]:
+    root = _repo_root()
+    return [str(root / d) for d in LINT_ROOTS if (root / d).is_dir()]
+
+
+def _run_lint(paths: list[str]) -> list[Finding]:
+    return lint_paths(paths)
+
+
+def _run_local_audits() -> list[Finding]:
+    from repro.analysis.traceaudit import run_local_audits
+
+    return run_local_audits()
+
+
+def _run_sharded_subprocess() -> list[Finding]:
+    """Audit the sharded driver under 8 emulated host devices.
+
+    ``--xla_force_host_platform_device_count`` only takes effect before
+    jax initializes, so the sharded audit always runs in a fresh child
+    process regardless of the parent's device count.
+    """
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (flags + " --xla_force_host_platform_device_count=8").strip()
+    env.pop("REPRO_INTERPRET", None)  # audits pin interpret mode themselves
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--inner-sharded"],
+        capture_output=True, text=True, env=env,
+        cwd=str(_repo_root()), timeout=600,
+    )
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith(_CHILD_PREFIX):
+            payload = json.loads(line[len(_CHILD_PREFIX):])
+            return [Finding(**d) for d in payload]
+    return [Finding(
+        path="trace:sharded", line=0, rule="retrace",
+        message=(
+            "sharded audit subprocess produced no result "
+            f"(exit {proc.returncode}); stderr tail: "
+            + " | ".join(proc.stderr.splitlines()[-3:])
+        ),
+    )]
+
+
+def _inner_sharded() -> int:
+    """Child-process entry: run the sharded audits, emit findings as JSON."""
+    from repro.analysis.traceaudit import run_sharded_audits
+
+    findings = run_sharded_audits()
+    payload = [
+        {"path": f.path, "line": f.line, "rule": f.rule,
+         "message": f.message, "col": f.col}
+        for f in findings
+    ]
+    print(_CHILD_PREFIX + json.dumps(payload))
+    return 0
+
+
+def _list_rules() -> int:
+    for rule in RULES.values():
+        print(f"{rule.id}: {rule.summary}")
+        print(textwrap.indent(textwrap.fill(rule.rationale, width=72), "    "))
+        print()
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static analysis + trace audit (jaxlint).",
+    )
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--check", action="store_true",
+                      help="lint + trace audits (the CI gate; default)")
+    mode.add_argument("--lint-only", action="store_true",
+                      help="stage 1 AST lint only")
+    mode.add_argument("--audit-only", action="store_true",
+                      help="stage 2 trace audits only")
+    mode.add_argument("--list-rules", action="store_true",
+                      help="print the rule table and exit")
+    mode.add_argument("--inner-sharded", action="store_true",
+                      help=argparse.SUPPRESS)  # child-process entry
+    ap.add_argument("--paths", nargs="*", default=None, metavar="PATH",
+                    help="restrict the lint to these files/directories")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the 8-device sharded audit subprocess")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        return _list_rules()
+    if args.inner_sharded:
+        return _inner_sharded()
+
+    do_lint = not args.audit_only
+    do_audit = not args.lint_only
+
+    findings: list[Finding] = []
+    if do_lint:
+        paths = args.paths if args.paths else _default_lint_paths()
+        findings += _run_lint(paths)
+    if do_audit:
+        findings += _run_local_audits()
+        if not args.no_sharded:
+            findings += _run_sharded_subprocess()
+
+    if findings:
+        print(format_findings(findings))
+        print(f"jaxlint: {len(findings)} finding(s)")
+        return 1
+    stages = []
+    if do_lint:
+        stages.append("lint")
+    if do_audit:
+        stages.append("audit" + ("" if args.no_sharded else "+sharded"))
+    print(f"jaxlint: clean ({', '.join(stages)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,633 @@
+"""Stage 1: a JAX-aware AST lint over the repo's hot-path modules.
+
+The pass is *scope-aware*: rules about traced code only fire inside
+functions the scanner can prove are traced —
+
+  * decorated with ``@jax.jit``/``@jax.vmap``/... (any dotted spelling);
+  * passed to a tracing consumer (``lax.while_loop``, ``lax.cond``,
+    ``lax.switch``, ``lax.scan``, ``jax.jit``, ``jax.shard_map``, ...) as
+    a name or inline lambda, resolved lexically;
+  * defined inside a function already known to be traced (a nested def
+    executes during the enclosing trace);
+  * or carrying an explicit ``# jaxlint: traced`` pragma on the ``def``
+    line (for functions a builder returns and another module jits).
+
+Inside a traced function, *taint* starts at the parameters (the traced
+arguments) and propagates through assignments.  Reads that are static at
+trace time — ``.shape``/``.ndim``/``.dtype``/``.size``, ``len()``,
+``isinstance()``/``type()`` — scrub taint, so configuration branches on
+closure variables or shapes never fire the rules.  Nested defs inherit
+the taint of enclosing *traced* scopes only: closure variables captured
+from a non-traced builder are trace-time constants.
+
+The module-wide ``raw-collective`` rule needs no tracing context: a
+``lax.psum``/``lax.ppermute``/... spelling is flagged anywhere outside
+``repro.dist.collectives`` (see ``rules.COLLECTIVE_HOMES``).
+
+Deliberately shallow: calls *out* of a traced function into another
+module are not followed (mark the callee traced if it matters), and
+attribute-chased aliasing (``f = lax; f.psum``) is invisible.  The lint
+is a tripwire for the bug classes we have actually shipped, not a proof
+system.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+
+from repro.analysis.report import Finding
+from repro.analysis.rules import (
+    COLLECTIVE_HOMES,
+    COLLECTIVE_PRIMITIVES,
+    F64_DTYPE_NAMES,
+    HOST_CAST_BUILTINS,
+    HOST_SYNC_METHODS,
+    NUMPY_MODULE_NAMES,
+    TRACED_CONSUMERS,
+    TRACING_DECORATORS,
+)
+
+__all__ = ["lint_file", "lint_paths", "lint_source"]
+
+_PRAGMA = re.compile(
+    r"#\s*jaxlint:\s*(ok|traced)\s*(?:\[\s*([a-zA-Z0-9_,\- ]*?)\s*\])?")
+
+#: attribute reads that yield trace-static values (scrub taint).
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "aval",
+                           "itemsize", "weak_type"})
+#: calls that yield trace-static values regardless of their arguments.
+_STATIC_CALLS = frozenset({"len", "isinstance", "type", "getattr",
+                           "hasattr", "id", "repr", "str"})
+
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _last_name(node) -> str | None:
+    """Trailing identifier of a Name/Attribute chain (``a.b.c`` -> "c")."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _attr_root(node) -> str | None:
+    """Leading identifier of a Name/Attribute chain (``a.b.c`` -> "a")."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _param_names(fn) -> set[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def _assigned_names(target) -> set[str]:
+    """Names bound by an assignment target (tuples/lists/stars unpacked)."""
+    out: set[str] = set()
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+    return out
+
+
+class _Pragmas:
+    """Per-line ``# jaxlint:`` pragmas, from the token stream."""
+
+    def __init__(self, source: str):
+        self.ok: dict[int, set[str] | None] = {}   # None = all rules
+        self.traced: set[int] = set()
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+            for tok in tokens:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _PRAGMA.search(tok.string)
+                if not m:
+                    continue
+                kind, rule_list = m.group(1), m.group(2)
+                line = tok.start[0]
+                if kind == "traced":
+                    self.traced.add(line)
+                elif rule_list:
+                    rset = {r.strip() for r in rule_list.split(",")
+                            if r.strip()}
+                    prev = self.ok.get(line)
+                    self.ok[line] = (None if prev is None and line in self.ok
+                                     else (prev or set()) | rset)
+                else:
+                    self.ok[line] = None
+        except tokenize.TokenError:      # pragma: no cover - broken source
+            pass
+
+    def allows(self, line: int, rule: str) -> bool:
+        if line not in self.ok:
+            return False
+        rules = self.ok[line]
+        return rules is None or rule in rules
+
+
+class _Scope:
+    """One function (or module) scope: local defs + parent chain."""
+
+    def __init__(self, node, parent: "_Scope | None"):
+        self.node = node
+        self.parent = parent
+        self.defs: dict[str, ast.AST] = {}     # local def name -> node
+        self.children: list[_Scope] = []
+        self.traced = False          # body executes during some trace
+        self.traced_direct = False   # *this* function's params are traced
+
+    def resolve(self, name: str):
+        scope: _Scope | None = self
+        while scope is not None:
+            if name in scope.defs:
+                return scope.defs[name]
+            scope = scope.parent
+        return None
+
+
+def _build_scopes(tree) -> tuple[_Scope, dict[ast.AST, _Scope]]:
+    """Scope tree + node->scope map for every function/lambda def."""
+    root = _Scope(tree, None)
+    by_node: dict[ast.AST, _Scope] = {tree: root}
+
+    def visit(node, scope: _Scope):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FuncNode):
+                sub = _Scope(child, scope)
+                by_node[child] = sub
+                scope.children.append(sub)
+                if not isinstance(child, ast.Lambda):
+                    scope.defs[child.name] = child
+                visit(child, sub)
+            else:
+                visit(child, scope)
+
+    visit(tree, root)
+    return root, by_node
+
+
+def _containing_scope(tree, by_node) -> dict[ast.AST, _Scope]:
+    """Map every AST node to the innermost function scope that owns it."""
+    owner: dict[ast.AST, _Scope] = {}
+
+    def visit(node, scope):
+        owner[node] = scope
+        for child in ast.iter_child_nodes(node):
+            visit(child, by_node.get(child, scope))
+
+    visit(tree, by_node[tree])
+    return owner
+
+
+#: consumer names that collide with Python builtins: honoured only in
+#: dotted form (``lax.map``), never as a bare name.
+_BARE_AMBIGUOUS = frozenset({"map", "filter"})
+
+
+def _mark_traced(tree, root, by_node, owner, pragmas) -> None:
+    """Flip ``scope.traced``/``traced_direct`` for provably-traced defs."""
+    # 1. decorators + pragma
+    for node, scope in by_node.items():
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                if _last_name(target) in TRACING_DECORATORS:
+                    scope.traced_direct = True
+            if node.lineno in pragmas.traced:
+                scope.traced_direct = True
+
+    # 2. names/lambdas passed to tracing consumers, resolved lexically
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _last_name(node.func) not in TRACED_CONSUMERS:
+            continue
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in _BARE_AMBIGUOUS):
+            continue                          # builtin map/filter, not lax
+        scope = owner[node]
+        candidates: list[ast.AST] = []
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            elts = arg.elts if isinstance(arg, (ast.List, ast.Tuple)) else \
+                [arg]
+            for elt in elts:
+                if isinstance(elt, ast.Lambda):
+                    candidates.append(elt)
+                elif isinstance(elt, ast.Name):
+                    resolved = scope.resolve(elt.id)
+                    if resolved is not None:
+                        candidates.append(resolved)
+        for fn in candidates:
+            if fn in by_node:
+                by_node[fn].traced_direct = True
+
+    # 3. closure: everything nested inside a traced function executes
+    # during that trace — but only evidence-traced functions get their
+    # *parameters* tainted (a nested builder like ``run_cycle_at(k)`` is
+    # called with static Python values during the trace).
+    def flood(scope, inside):
+        scope.traced = scope.traced_direct or (
+            inside and scope.node is not root.node)
+        for child in scope.children:
+            flood(child, scope.traced)
+
+    flood(root, False)
+
+
+# ---------------------------------------------------------------------------
+# taint
+# ---------------------------------------------------------------------------
+
+
+def _expr_tainted(node, tainted: set[str]) -> bool:
+    """True if evaluating ``node`` can yield a traced (non-static) value."""
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False                      # x.shape is static under jit
+        return _expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Call):
+        fname = _last_name(node.func)
+        if fname in _STATIC_CALLS:
+            return False                      # len(x)/isinstance(x, T)
+        args = list(node.args) + [kw.value for kw in node.keywords]
+        return (_expr_tainted(node.func, tainted)
+                or any(_expr_tainted(a, tainted) for a in args))
+    if isinstance(node, _FuncNode):
+        return False                          # defining != evaluating
+    return any(_expr_tainted(c, tainted) for c in ast.iter_child_nodes(node))
+
+
+def _own_statements(fn):
+    """Child nodes of ``fn`` excluding nested function/lambda bodies."""
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FuncNode):
+                continue
+            yield child
+            yield from walk(child)
+
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        if isinstance(stmt, _FuncNode):
+            continue
+        yield stmt
+        yield from walk(stmt)
+
+
+def _compute_taint(fn, inherited: set[str],
+                   seed_params: bool = True) -> set[str]:
+    tainted = set(inherited) | (_param_names(fn) if seed_params else set())
+    for _ in range(10):                       # fixpoint; loops converge fast
+        changed = False
+        for node in _own_statements(fn):
+            targets: list = []
+            value = None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            elif isinstance(node, ast.AugAssign):
+                targets, value = [node.target], node.value
+            elif isinstance(node, ast.NamedExpr):
+                targets, value = [node.target], node.value
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                targets, value = [node.target], node.iter
+            elif isinstance(node, ast.comprehension):
+                targets, value = [node.target], node.iter
+            elif isinstance(node, (ast.withitem,)) and node.optional_vars:
+                targets, value = [node.optional_vars], node.context_expr
+            if value is None or not targets:
+                continue
+            if _expr_tainted(value, tainted):
+                for t in targets:
+                    names = _assigned_names(t)
+                    if not names <= tainted:
+                        tainted |= names
+                        changed = True
+        if not changed:
+            break
+    return tainted
+
+
+# ---------------------------------------------------------------------------
+# per-rule checks
+# ---------------------------------------------------------------------------
+
+
+def _is_f64_spelling(node) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value in F64_DTYPE_NAMES
+    if isinstance(node, ast.Attribute):
+        return node.attr in F64_DTYPE_NAMES
+    return False
+
+
+def _check_traced_fn(fn, tainted, path, findings) -> None:
+    """host-sync + f64-literal inside one traced function."""
+
+    def flag(node, rule, msg):
+        findings.append(Finding(path=path, line=node.lineno, rule=rule,
+                                message=msg, col=node.col_offset))
+
+    for node in _own_statements(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            if _expr_tainted(node.test, tainted):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                flag(node, "host-sync",
+                     f"Python `{kind}` on a traced value breaks the trace "
+                     "or syncs to host; use jnp.where/lax.cond")
+        elif isinstance(node, ast.IfExp):
+            if _expr_tainted(node.test, tainted):
+                flag(node, "host-sync",
+                     "conditional expression on a traced value; use "
+                     "jnp.where/lax.select")
+        elif isinstance(node, ast.Assert):
+            if _expr_tainted(node.test, tainted):
+                flag(node, "host-sync",
+                     "assert on a traced value concretizes it; use "
+                     "checkify or move the check to setup")
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            if _expr_tainted(node.iter, tainted):
+                flag(node, "host-sync",
+                     "Python loop over a traced value; use lax.fori_loop/"
+                     "lax.scan")
+        elif isinstance(node, ast.Call):
+            fname = _last_name(node.func)
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            args_tainted = any(_expr_tainted(a, tainted) for a in args)
+            if (isinstance(node.func, ast.Name)
+                    and fname in HOST_CAST_BUILTINS and args_tainted):
+                flag(node, "host-sync",
+                     f"`{fname}()` on a traced value forces a device->host "
+                     "sync; keep it an array (astype/jnp casts)")
+            elif (isinstance(node.func, ast.Attribute)
+                    and fname in HOST_SYNC_METHODS
+                    and _expr_tainted(node.func.value, tainted)):
+                flag(node, "host-sync",
+                     f"`.{fname}()` on a traced value forces a "
+                     "device->host sync inside traced code")
+            elif (isinstance(node.func, ast.Attribute)
+                    and _attr_root(node.func) in NUMPY_MODULE_NAMES
+                    and args_tainted):
+                flag(node, "host-sync",
+                     f"`np.{fname}()` on a traced value concretizes it on "
+                     "host; use the jnp equivalent")
+            # f64-literal: hard-coded double width in traced code
+            if _last_name(node.func) in F64_DTYPE_NAMES:
+                flag(node, "f64-literal",
+                     "float64 constructor inside traced code; precision "
+                     "belongs to the StorageFormat/arith_dtype plumbing")
+            for a in args:
+                if _is_f64_spelling(a):
+                    flag(a, "f64-literal",
+                         "hard-coded float64 dtype inside traced code; "
+                         "thread arith_dtype/StorageFormat instead")
+
+
+# ---------------------------------------------------------------------------
+# carry-drop: while_loop/cond carries rebuilt minus a field
+# ---------------------------------------------------------------------------
+
+
+def _dict_literal_keys(node) -> tuple[frozenset[str], bool] | None:
+    """(keys, closed) for a dict literal; None if not a dict literal.
+
+    ``closed`` means the literal enumerates every key: ``dict(a=1, b=2)``
+    or ``{"a": 1}``.  ``dict(base, a=1)`` / ``{**base, "a": 1}`` inherit
+    unknown keys and are *open* — they can only add, never drop.
+    """
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id == "dict"):
+        if any(kw.arg is None for kw in node.keywords):
+            return None                       # dict(**x) — unknown keys
+        keys = frozenset(kw.arg for kw in node.keywords)
+        return keys, not node.args
+    if isinstance(node, ast.Dict):
+        keys = set()
+        closed = True
+        for k in node.keys:
+            if k is None:                     # {**base, ...}
+                closed = False
+            elif isinstance(k, ast.Constant) and isinstance(k.value, str):
+                keys.add(k.value)
+            else:
+                return None                   # computed keys: no idea
+        return frozenset(keys), closed
+    return None
+
+
+def _family_returns(fn, by_node):
+    """All ``return <expr>`` sites in ``fn`` and its nested defs.
+
+    A lambda's body *is* its return expression.
+    """
+    if isinstance(fn, ast.Lambda):
+        return [fn.body]
+    out = []
+    for child in ast.walk(fn):
+        if isinstance(child, ast.Return) and child.value is not None:
+            out.append(child.value)
+    return out
+
+
+def _resolve_arg(arg, scope):
+    """Resolve a call argument to a function node or a dict literal."""
+    if isinstance(arg, _FuncNode):
+        return arg
+    if isinstance(arg, ast.Name):
+        return scope.resolve(arg.id)
+    return None
+
+
+def _resolve_init(arg, scope, owner):
+    """Dict-literal keys of a while/fori init operand, if recoverable."""
+    info = _dict_literal_keys(arg)
+    if info is not None:
+        return info
+    if isinstance(arg, ast.Name):
+        # single straight-line assignment in the same scope
+        fn = scope.node
+        assigns = [
+            n for n in _own_statements(fn)
+            if isinstance(n, ast.Assign)
+            and any(isinstance(t, ast.Name) and t.id == arg.id
+                    for t in n.targets)
+        ] if isinstance(fn, _FuncNode) else []
+        if len(assigns) == 1:
+            return _dict_literal_keys(assigns[0].value)
+    return None
+
+
+def _check_carry_drop(tree, owner, by_node, path, findings) -> None:
+    def flag(node, msg):
+        findings.append(Finding(path=path, line=node.lineno,
+                                rule="carry-drop", message=msg,
+                                col=node.col_offset))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = _last_name(node.func)
+        scope = owner[node]
+        if fname in ("while_loop", "fori_loop"):
+            body_pos = 1 if fname == "while_loop" else 2
+            init_pos = body_pos + 1
+            if len(node.args) <= init_pos:
+                continue
+            body = _resolve_arg(node.args[body_pos], scope)
+            init = _resolve_init(node.args[init_pos], scope, owner)
+            if body is None:
+                continue
+            closed_returns = []
+            for ret in _family_returns(body, by_node):
+                info = _dict_literal_keys(ret)
+                if info and info[1]:
+                    closed_returns.append((ret, info[0]))
+            universe = set().union(*(k for _, k in closed_returns)) \
+                if closed_returns else set()
+            if init and init[1]:
+                universe |= init[0]
+            for ret, keys in closed_returns:
+                missing = universe - keys
+                if missing:
+                    flag(ret,
+                         f"{fname} carry rebuilt without "
+                         f"{sorted(missing)} — the dropped field freezes "
+                         "at its pre-loop value (PR 3 `stagnated` class); "
+                         "use dict(state, ...) to inherit")
+        elif fname == "cond" and len(node.args) >= 3:
+            branches = [_resolve_arg(a, scope) for a in node.args[1:3]]
+            if any(b is None for b in branches):
+                continue
+            per_branch = []
+            for b in branches:
+                closed = [
+                    info[0] for info in map(_dict_literal_keys,
+                                            _family_returns(b, by_node))
+                    if info and info[1]
+                ]
+                per_branch.append(closed)
+            if not all(per_branch):
+                continue                      # a branch with no closed dicts
+            universe = set().union(*(k for ks in per_branch for k in ks))
+            for b, closed in zip(branches, per_branch, strict=True):
+                for keys in closed:
+                    missing = universe - keys
+                    if missing:
+                        flag(b,
+                             f"cond branch returns a carry without "
+                             f"{sorted(missing)} present on the other "
+                             "branch — jax only catches *structural* "
+                             "mismatches, a shadowed field is silent")
+
+
+# ---------------------------------------------------------------------------
+# raw-collective: lax primitives outside repro.dist.collectives
+# ---------------------------------------------------------------------------
+
+
+def _lax_imports(tree) -> set[str]:
+    """Names imported directly from jax.lax in this module."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "jax.lax":
+            names |= {a.asname or a.name for a in node.names}
+    return names
+
+
+def _check_raw_collectives(tree, path, findings) -> None:
+    norm = path.replace(os.sep, "/")
+    if any(norm.endswith(home) for home in COLLECTIVE_HOMES):
+        return
+    from_lax = _lax_imports(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        hit = None
+        if (isinstance(func, ast.Attribute)
+                and func.attr in COLLECTIVE_PRIMITIVES
+                and _last_name(func.value) == "lax"):
+            hit = func.attr
+        elif (isinstance(func, ast.Name) and func.id in from_lax
+                and func.id in COLLECTIVE_PRIMITIVES):
+            hit = func.id
+        if hit:
+            findings.append(Finding(
+                path=path, line=node.lineno, rule="raw-collective",
+                col=node.col_offset,
+                message=f"direct lax.{hit} outside repro.dist.collectives "
+                        "— its bytes are invisible to exchange_bytes/"
+                        "gather_bytes/reduce_bytes; use the audited "
+                        "wrapper"))
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Lint one module's source; returns the surviving findings."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path=path, line=e.lineno or 0, rule="parse-error",
+                        message=str(e.msg))]
+    pragmas = _Pragmas(source)
+    root, by_node = _build_scopes(tree)
+    owner = _containing_scope(tree, by_node)
+    _mark_traced(tree, root, by_node, owner, pragmas)
+
+    findings: list[Finding] = []
+
+    def descend(scope: _Scope, inherited: set[str]):
+        for child in scope.children:
+            if child.traced:
+                taint = _compute_taint(child.node, inherited,
+                                       seed_params=child.traced_direct)
+                _check_traced_fn(child.node, taint, path, findings)
+                descend(child, taint)
+            else:
+                descend(child, set())
+
+    descend(root, set())
+    _check_carry_drop(tree, owner, by_node, path, findings)
+    _check_raw_collectives(tree, path, findings)
+
+    return [f for f in findings if not pragmas.allows(f.line, f.rule)]
+
+
+def lint_file(path: str) -> list[Finding]:
+    with open(path, encoding="utf-8") as f:
+        return lint_source(f.read(), path)
+
+
+def lint_paths(paths) -> list[Finding]:
+    """Lint every ``.py`` file under the given files/directories."""
+    findings: list[Finding] = []
+    for p in paths:
+        if os.path.isfile(p):
+            findings.extend(lint_file(p))
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = [d for d in sorted(dirnames)
+                           if d != "__pycache__"]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    findings.extend(lint_file(os.path.join(dirpath, name)))
+    return findings

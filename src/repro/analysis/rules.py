@@ -1,0 +1,163 @@
+"""Rule registry and repo-specific configuration for the jaxlint pass.
+
+Every rule exists because a past PR shipped (or nearly shipped) the bug it
+now catches; the rationale strings below are the institutional memory.
+``python -m repro.analysis --list-rules`` prints this table.
+
+Allowlisting
+------------
+
+A site that is genuinely fine appends a pragma comment::
+
+    x = float(steps)            # jaxlint: ok[host-sync] static config
+
+``# jaxlint: ok`` (no rule list) suppresses every rule on that line.  A
+function the scanner cannot prove is traced — e.g. one returned by a
+builder and jitted in another module — is marked explicitly::
+
+    def solve(b, x0):           # jaxlint: traced
+        ...
+
+Module-level allowlists (``COLLECTIVE_HOMES``) cover the one place a raw
+collective is *supposed* to live: the audited wrappers themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = [
+    "COLLECTIVE_HOMES",
+    "COLLECTIVE_PRIMITIVES",
+    "F64_DTYPE_NAMES",
+    "HOST_CAST_BUILTINS",
+    "HOST_SYNC_METHODS",
+    "RULES",
+    "Rule",
+    "TRACED_CONSUMERS",
+    "TRACING_DECORATORS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    rationale: str
+
+
+RULES: dict[str, Rule] = {
+    r.id: r
+    for r in (
+        Rule(
+            "host-sync",
+            "No Python control flow or concretizing casts on traced values",
+            "A Python `if`/`while`/`float()`/`.item()` on a value that "
+            "flows from a traced argument either breaks the trace or "
+            "forces a silent device->host sync inside the hot loop — the "
+            "exact overhead the device-resident driver exists to remove "
+            "(the paper's bandwidth argument dies with one sync per "
+            "cycle).",
+        ),
+        Rule(
+            "f64-literal",
+            "No hard-coded float64 inside traced cycle code",
+            "Basis precision is the StorageFormat protocol's job; one "
+            "stray astype('float64')/jnp.float64 inside a jitted cycle "
+            "re-inflates a compressed basis to full width and silently "
+            "erases the FRSZ2 bandwidth win (the CB-GMRES failure mode "
+            "Aliaga et al. warn about).",
+        ),
+        Rule(
+            "carry-drop",
+            "No while_loop/cond carry field dropped on one branch",
+            "A branch that rebuilds the carry dict from scratch and "
+            "forgets a field freezes that field at its pre-branch value "
+            "for the rest of the solve — the PR 3 `stagnated` bug class; "
+            "jax only errors when the *structures* differ, not when a "
+            "fresh literal happens to shadow a live flag.",
+        ),
+        Rule(
+            "raw-collective",
+            "Collective primitives only inside repro.dist.collectives",
+            "Wire accounting (`exchange_bytes`/`gather_bytes`/"
+            "`reduce_bytes`) is complete by construction only if every "
+            "byte that crosses the fabric moves through the audited "
+            "wrappers — a direct lax.ppermute/psum elsewhere is invisible "
+            "to the benchmarks CI gates on (the PR 4 (P-1)x undercount "
+            "class).",
+        ),
+        # -- stage 2 (trace-time) rules -----------------------------------
+        Rule(
+            "retrace",
+            "Zero retraces on a second same-shape solve, every driver",
+            "The PR 5 plan/solve caches exist so repeated solves reuse one "
+            "compiled program; a closure-captured per-solve array or an "
+            "unstable cache key silently recompiles every call, and the "
+            "driver-overhead numbers the benchmarks report become "
+            "compile-time measurements.",
+        ),
+        Rule(
+            "spec-mismatch",
+            "Partition-spec trees structurally match the while_loop state",
+            "driver_partition_specs/block_driver_partition_specs are the "
+            "shard_map out_specs for the whole driver state; a field added "
+            "to the state but not the spec tree (or vice versa) fails at "
+            "runtime deep inside shard_map with an unreadable pytree "
+            "error — the audit diffs the trees by path at trace time.",
+        ),
+        Rule(
+            "f64-leak",
+            "No f64 constants/converts in a compressed-format cycle jaxpr",
+            "One convert_element_type to f64 inside the frsz2-only cycle "
+            "re-inflates the compressed basis to full width — the "
+            "CB-GMRES bandwidth win evaporates without any test failing "
+            "(results stay numerically right, just slow).",
+        ),
+        Rule(
+            "transfer",
+            "Device drivers run under jax.transfer_guard('disallow')",
+            "The device-resident driver's whole point is zero host "
+            "round-trips per solve; an implicit transfer inside the "
+            "compiled path (a numpy constant, a concretized scalar) "
+            "reintroduces the per-cycle sync the paper's driver-overhead "
+            "argument removes.",
+        ),
+    )
+}
+
+#: decorator names (last dotted component) that make a function traced.
+TRACING_DECORATORS = frozenset({
+    "jit", "vmap", "pmap", "shard_map", "checkpoint", "remat",
+    "custom_jvp", "custom_vjp",
+})
+
+#: callables (last dotted component) whose function-valued arguments are
+#: traced.  Covers lax control flow and the transform entry points.
+TRACED_CONSUMERS = frozenset({
+    "while_loop", "fori_loop", "cond", "switch", "scan", "associative_scan",
+    "map", "jit", "vmap", "pmap", "shard_map", "checkpoint", "remat",
+    "grad", "value_and_grad", "custom_jvp", "custom_vjp",
+})
+
+#: builtins that concretize a traced value (host sync / trace break).
+HOST_CAST_BUILTINS = frozenset({"float", "int", "bool", "complex"})
+
+#: methods that concretize a traced value.
+HOST_SYNC_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+
+#: dtype spellings the f64-literal rule hunts for.
+F64_DTYPE_NAMES = frozenset({"float64", "f64", "double"})
+
+#: attribute roots treated as numpy (host) modules inside traced code.
+NUMPY_MODULE_NAMES = frozenset({"np", "numpy"})
+
+#: path suffixes where raw collective primitives are allowed to live —
+#: the audited wrappers themselves.
+COLLECTIVE_HOMES = ("repro/dist/collectives.py",)
+
+#: lax primitives that move bytes across the fabric.  ``axis_index`` and
+#: friends are deliberately absent: they cost no wire.
+COLLECTIVE_PRIMITIVES = frozenset({
+    "ppermute", "pshuffle", "psum", "psum_scatter", "pmean", "pmax",
+    "pmin", "all_gather", "all_to_all", "pgather",
+})
