@@ -7,6 +7,14 @@ import pytest
 jax.config.update("jax_enable_x64", True)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "transfer_guard: device-driver sweep under "
+        "jax.transfer_guard('disallow') — CI runs these as their own step",
+    )
+
+
 @pytest.fixture(scope="session")
 def rng():
     import numpy as np
