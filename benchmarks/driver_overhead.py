@@ -63,11 +63,13 @@ def run(problem: str, n: int, formats: list[str], *, m: int, target_rrn,
     print("-" * len(hdr))
     for fmt in formats:
         hc, hw, rh = _time(
-            lambda: gmres(A, b, storage=fmt, m=m, max_iters=max_iters,
-                          target_rrn=rrn, driver="host"), repeats)
+            lambda fmt=fmt: gmres(A, b, storage=fmt, m=m,
+                                  max_iters=max_iters, target_rrn=rrn,
+                                  driver="host"), repeats)
         dc, dw, rd = _time(
-            lambda: gmres(A, b, storage=fmt, m=m, max_iters=max_iters,
-                          target_rrn=rrn, driver="device"), repeats)
+            lambda fmt=fmt: gmres(A, b, storage=fmt, m=m,
+                                  max_iters=max_iters, target_rrn=rrn,
+                                  driver="device"), repeats)
         assert rh.iterations == rd.iterations, (
             "driver parity violated", fmt, rh.iterations, rd.iterations)
         row = dict(problem=problem, n=n, format=fmt, m=m,
@@ -79,8 +81,9 @@ def run(problem: str, n: int, formats: list[str], *, m: int, target_rrn,
             B = jnp.stack([b] + [
                 b * (1 + 0.1 * i) for i in range(1, batch)])
             bc, bw, _ = _time(
-                lambda: gmres_batched(A, B, storage=fmt, m=m,
-                                      max_iters=max_iters, target_rrn=rrn),
+                lambda fmt=fmt, B=B: gmres_batched(
+                    A, B, storage=fmt, m=m, max_iters=max_iters,
+                    target_rrn=rrn),
                 repeats)
             row.update(batch=batch, batch_warm_s=bw,
                        batch_warm_per_solve_s=bw / batch)

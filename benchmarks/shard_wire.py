@@ -57,6 +57,7 @@ import sys
 
 TRANSPORTS = ("plain", "compressed", "compressed+norms")
 MATVEC_MODES = ("halo", "rows", "block3d")
+_ALL_MODES = ",".join(MATVEC_MODES)
 
 
 def cycle_wire_bytes(m: int, j_stop: int, reorth: int, *, passes: int,
@@ -223,7 +224,7 @@ def _inner(args) -> int:
 
 def run(n: int = 2048, m: int = 30, shards: int = 8, max_iters: int = 4000,
         problem: str = "synth:stencil27", storage: str = "frsz2_32",
-        matvec: str = ",".join(MATVEC_MODES), reorder: str = "none",
+        matvec: str = _ALL_MODES, reorder: str = "none",
         check: bool = False, json_path: str | None = None):
     """Spawn the measurement in a subprocess with emulated devices
     (the parent's jax is typically already initialized single-device)."""
@@ -260,7 +261,7 @@ def main(argv=None):
     ap.add_argument("--max-iters", type=int, default=4000)
     ap.add_argument("--problem", default="synth:stencil27")
     ap.add_argument("--storage", default="frsz2_32")
-    ap.add_argument("--matvec", default=",".join(MATVEC_MODES),
+    ap.add_argument("--matvec", default=_ALL_MODES,
                     help="comma list of matvec modes to measure "
                          "(halo,rows,replicated,auto)")
     ap.add_argument("--reorder", default="none",

@@ -85,7 +85,7 @@ class ArchConfig:
         """Eligible for long_500k (SSM / hybrid / sliding-window)."""
         return self.family in ("ssm", "hybrid") or self.window > 0
 
-    def supports_shape(self, shape: "ShapeConfig") -> bool:
+    def supports_shape(self, shape: ShapeConfig) -> bool:
         if shape.kind == "long_decode" and not self.sub_quadratic:
             return False
         return True
@@ -135,7 +135,7 @@ class ArchConfig:
         dead = L * 3 * d * ff * (self.num_experts - self.top_k)
         return self.param_count() - dead
 
-    def reduced(self) -> "ArchConfig":
+    def reduced(self) -> ArchConfig:
         """Smoke-test configuration: same family/topology, tiny dims."""
         return dataclasses.replace(
             self,

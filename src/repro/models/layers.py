@@ -36,7 +36,7 @@ def scan_or_unroll(body, carry, xs, *, unroll: bool = False):
     n = jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(n):
-        xi = jax.tree.map(lambda x: x[i], xs)
+        xi = jax.tree.map(lambda x, i=i: x[i], xs)
         carry, y = body(carry, xi)
         ys.append(y)
     if ys and jax.tree.leaves(ys[0]):

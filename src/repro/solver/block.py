@@ -51,7 +51,8 @@ the same summation semantics as the vmap path, which is what
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

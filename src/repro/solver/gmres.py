@@ -72,7 +72,8 @@ from __future__ import annotations
 import dataclasses
 from collections import OrderedDict
 from functools import partial
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

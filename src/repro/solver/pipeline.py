@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -327,7 +327,7 @@ class Preconditioner:
     def spec(self):  # pragma: no cover - overridden
         raise NotImplementedError
 
-    def permuted(self, perm) -> "Preconditioner":
+    def permuted(self, perm) -> Preconditioner:
         """Equivalent preconditioner in RCM-permuted coordinates.
 
         When an :class:`~repro.sparse.plan.OperatorPlan` reorders the
@@ -344,7 +344,7 @@ class Preconditioner:
             "repro.sparse.plan) or pass reorder='none'")
 
     def shard_local(self, axis_name: str, n_local: int,
-                    n_pad: int | None = None) -> "Preconditioner":
+                    n_pad: int | None = None) -> Preconditioner:
         """Equivalent preconditioner over the device-local vector chunk.
 
         Called once by the sharded driver before it wraps the solve in
@@ -389,7 +389,7 @@ class JacobiPreconditioner(Preconditioner):
             np.asarray(self.inv_diag).tobytes()).hexdigest()
 
     @classmethod
-    def from_operator(cls, A) -> "JacobiPreconditioner":
+    def from_operator(cls, A) -> JacobiPreconditioner:
         diag_fn = getattr(A, "diag", None)
         if diag_fn is None:
             raise ValueError(
@@ -572,7 +572,7 @@ class AdaptivePolicy(PrecisionPolicy):
 
     @classmethod
     def from_target(cls, levels, target_rrn: float,
-                    safety: float = 0.5) -> "AdaptivePolicy":
+                    safety: float = 0.5) -> AdaptivePolicy:
         """Derive the switch points from the target RRN and format epsilons.
 
         Inexact-Krylov accounting: a cycle entered at restart residual

@@ -106,7 +106,7 @@ class CSR:
     def __matmul__(self, x):
         return self.matvec(x)
 
-    def to_ell(self, width: int | None = None) -> "ELL":
+    def to_ell(self, width: int | None = None) -> ELL:
         indptr = np.asarray(self.indptr)
         indices = np.asarray(self.indices)
         data = np.asarray(self.data)
