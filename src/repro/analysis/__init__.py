@@ -1,11 +1,12 @@
 """repro.analysis — JAX-aware static analysis + trace audit (jaxlint).
 
-Two stages gate every PR (CI runs ``python -m repro.analysis --check``):
+Three stages gate every PR (CI runs ``python -m repro.analysis --check``):
 
 * **Stage 1 — AST lint** (:mod:`repro.analysis.astlint`): taint-tracks
   traced function arguments through assignments and flags host syncs,
   hard-coded f64, while_loop carry fields dropped on one branch, and raw
-  collectives outside :mod:`repro.dist.collectives`.
+  collectives outside :mod:`repro.dist.collectives` (including aliased
+  imports and ``functools.partial`` indirection).
 
 * **Stage 2 — trace audit** (:mod:`repro.analysis.traceaudit`): compiles
   the host/device/block (and, in a subprocess with 8 emulated devices,
@@ -14,19 +15,34 @@ Two stages gate every PR (CI runs ``python -m repro.analysis --check``):
   f64-free compressed-format cycle jaxpr, and a clean
   ``jax.transfer_guard("disallow")`` sweep.
 
+* **Stage 3 — spmdcheck** (:mod:`repro.analysis.jaxprcheck` +
+  :mod:`repro.analysis.traffic`): walks the drivers' closed jaxprs,
+  flagging collectives under shard-varying trip counts or mismatched
+  cond branches (the SPMD hang class), malformed ppermute permutations
+  and overlapping exchange rounds, and axis names the mesh does not
+  bind; then re-derives the wire and basis-read byte counts from the
+  jaxpr's collective operands and holds the hand-maintained model
+  (``exchange_bytes``/``gather_bytes``/``reduce_bytes``,
+  ``GmresResult.bytes_read``/``op_reads``) to exact equality.
+
 Rules, allowlist pragmas, and the per-rule institutional memory live in
 :mod:`repro.analysis.rules`.
 """
 from repro.analysis.astlint import lint_file, lint_paths, lint_source
+from repro.analysis.jaxprcheck import CollectiveSite, check_jaxpr
 from repro.analysis.report import Finding, format_findings
 from repro.analysis.rules import RULES, Rule
+from repro.analysis.traffic import price_program
 
 __all__ = [
     "RULES",
+    "CollectiveSite",
     "Finding",
     "Rule",
+    "check_jaxpr",
     "format_findings",
     "lint_file",
     "lint_paths",
     "lint_source",
+    "price_program",
 ]

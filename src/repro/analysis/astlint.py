@@ -22,13 +22,17 @@ from a non-traced builder are trace-time constants.
 
 The module-wide ``raw-collective`` rule needs no tracing context: a
 ``lax.psum``/``lax.ppermute``/... spelling is flagged anywhere outside
-``repro.dist.collectives`` (see ``rules.COLLECTIVE_HOMES``).
+``repro.dist.collectives`` (see ``rules.COLLECTIVE_HOMES``).  The rule
+resolves through the module's *import bindings* — ``from jax import lax
+as L; L.psum(...)``, ``from jax.lax import psum as p; p(...)``, and a
+collective smuggled through ``functools.partial(lax.ppermute, ...)``
+all count as the primitive they name.
 
 Deliberately shallow: calls *out* of a traced function into another
 module are not followed (mark the callee traced if it matters), and
-attribute-chased aliasing (``f = lax; f.psum``) is invisible.  The lint
-is a tripwire for the bug classes we have actually shipped, not a proof
-system.
+plain-assignment aliasing (``f = lax; f.psum``) is invisible — import
+bindings are resolved, value flow is not.  The lint is a tripwire for
+the bug classes we have actually shipped, not a proof system.
 """
 from __future__ import annotations
 
@@ -540,37 +544,61 @@ def _check_carry_drop(tree, owner, by_node, path, findings) -> None:
 # ---------------------------------------------------------------------------
 
 
-def _lax_imports(tree) -> set[str]:
-    """Names imported directly from jax.lax in this module."""
-    names = set()
+def _collective_bindings(tree) -> tuple[set[str], dict[str, str]]:
+    """Import bindings that reach jax.lax collectives in this module.
+
+    Returns ``(lax module aliases, local name -> primitive name)`` so the
+    rule sees through ``from jax import lax as L``, ``import jax.lax as
+    jl``, and ``from jax.lax import psum as p``.
+    """
+    lax_aliases = {"lax"}
+    prims: dict[str, str] = {}
     for node in ast.walk(tree):
-        if isinstance(node, ast.ImportFrom) and node.module == "jax.lax":
-            names |= {a.asname or a.name for a in node.names}
-    return names
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.lax" and a.asname:
+                    lax_aliases.add(a.asname)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for a in node.names:
+                    if a.name == "lax":
+                        lax_aliases.add(a.asname or "lax")
+            elif node.module == "jax.lax":
+                for a in node.names:
+                    if a.name in COLLECTIVE_PRIMITIVES:
+                        prims[a.asname or a.name] = a.name
+    return lax_aliases, prims
+
+
+def _collective_ref(node, lax_aliases, prims) -> str | None:
+    """Primitive name if ``node`` references a lax collective, else None."""
+    if (isinstance(node, ast.Attribute)
+            and node.attr in COLLECTIVE_PRIMITIVES
+            and _last_name(node.value) in lax_aliases):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return prims.get(node.id)
+    return None
 
 
 def _check_raw_collectives(tree, path, findings) -> None:
     norm = path.replace(os.sep, "/")
     if any(norm.endswith(home) for home in COLLECTIVE_HOMES):
         return
-    from_lax = _lax_imports(tree)
+    lax_aliases, prims = _collective_bindings(tree)
     for node in ast.walk(tree):
         if not isinstance(node, ast.Call):
             continue
-        func = node.func
-        hit = None
-        if (isinstance(func, ast.Attribute)
-                and func.attr in COLLECTIVE_PRIMITIVES
-                and _last_name(func.value) == "lax"):
-            hit = func.attr
-        elif (isinstance(func, ast.Name) and func.id in from_lax
-                and func.id in COLLECTIVE_PRIMITIVES):
-            hit = func.id
+        hit = _collective_ref(node.func, lax_aliases, prims)
+        spelled = f"direct lax.{hit}"
+        if hit is None and _last_name(node.func) == "partial" and node.args:
+            hit = _collective_ref(node.args[0], lax_aliases, prims)
+            spelled = f"lax.{hit} bound via functools.partial"
         if hit:
             findings.append(Finding(
                 path=path, line=node.lineno, rule="raw-collective",
                 col=node.col_offset,
-                message=f"direct lax.{hit} outside repro.dist.collectives "
+                message=f"{spelled} outside repro.dist.collectives "
                         "— its bytes are invisible to exchange_bytes/"
                         "gather_bytes/reduce_bytes; use the audited "
                         "wrapper"))

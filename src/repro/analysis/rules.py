@@ -122,6 +122,54 @@ RULES: dict[str, Rule] = {
             "reintroduces the per-cycle sync the paper's driver-overhead "
             "argument removes.",
         ),
+        # -- stage 3 (jaxpr-level spmdcheck) rules ------------------------
+        Rule(
+            "nonuniform-collective",
+            "No collective under a shard-varying trip count or branch",
+            "shard_map runs one program per shard; a psum inside a while "
+            "whose trip count depends on shard-local data (or a cond whose "
+            "branches issue different collective sequences) deadlocks the "
+            "moment one shard exits the loop early — the classic SPMD "
+            "hang, undiagnosable at runtime because every rank is simply "
+            "'still waiting'.",
+        ),
+        Rule(
+            "bad-permutation",
+            "Every ppermute perm is a partial injection; rounds disjoint",
+            "A duplicated source silently drops one message and a "
+            "duplicated destination is backend-dependent garbage; reusing "
+            "a (src, dst) channel across halo_exchange_3d rounds "
+            "serializes what the round packing exists to overlap.  jax "
+            "traces all of these without complaint.",
+        ),
+        Rule(
+            "axis-mismatch",
+            "Collective axis names match the enclosing mesh",
+            "A collective naming an axis the surrounding shard_map does "
+            "not bind (or issued outside any shard_map at all) fails only "
+            "when that exact code path executes on a multi-device mesh — "
+            "the trace on one emulated device sails through.",
+        ),
+        Rule(
+            "wire-model",
+            "Modelled wire bytes equal jaxpr-derived collective bytes",
+            "exchange_bytes/gather_bytes/reduce_bytes are hand-maintained "
+            "arithmetic, wrong twice already (PR 3's re-orth undercount, "
+            "PR 4's (P-1)x all-gather undercount); pricing the collective "
+            "operands straight off the jaxpr and demanding exact equality "
+            "turns the model from trusted numbers into a checked "
+            "invariant.",
+        ),
+        Rule(
+            "reads-model",
+            "GmresResult.bytes_read/op_reads match a fixed trajectory",
+            "bytes_read is the denominator of every bandwidth claim in "
+            "the paper reproduction; on a pinned trajectory (target_rrn=0, "
+            "CGS2, max_iters=k*m) the count is exactly cycles x rows x "
+            "row-bytes with row bytes read off the store avals, so any "
+            "drift between the accounting and the actual buffers is an "
+            "error, not noise.",
+        ),
     )
 }
 

@@ -217,10 +217,9 @@ class FrszFormat(StorageFormat):
     def empty(self, m: int, n: int):
         spec = self.spec
         nb = self._nb(n)
-        if spec.aligned:
-            codes = jnp.zeros((m, nb, spec.bs), F._code_dtype(spec.l))
-        else:
-            codes = jnp.zeros((m, nb, spec.words_per_block), jnp.uint32)
+        codes = (jnp.zeros((m, nb, spec.bs), F._code_dtype(spec.l))
+                 if spec.aligned
+                 else jnp.zeros((m, nb, spec.words_per_block), jnp.uint32))
         exps = jnp.zeros((m, nb), spec.exp_dtype)
         return {"codes": codes, "exps": exps}
 
@@ -666,10 +665,8 @@ def _build_mixed(name, *, arith_dtype=jnp.float64, target_rrn=None, m=None,
     tail_name = parts[2] if len(parts) > 2 else "frsz2_32"
     tail = format_by_name(tail_name, arith_dtype=arith_dtype,
                           target_rrn=target_rrn, m=m, **ctx)
-    if head_spec == "auto":
-        k = auto_mixed_head(tail.eps(), target_rrn, m)
-    else:
-        k = int(head_spec)
+    k = (auto_mixed_head(tail.eps(), target_rrn, m)
+         if head_spec == "auto" else int(head_spec))
     return MixedFormat(k=k, head=NativeFormat(arith_dtype), tail=tail)
 
 

@@ -281,10 +281,8 @@ def compress(x: jax.Array, spec: FrszSpec = FRSZ2_32) -> BlockCompressed:
     c = _encode_block(sign, e, sig, emax, spec)  # steps 2-5
 
     code_dt = _code_dtype(spec.l)
-    if spec.aligned:
-        codes = c.astype(code_dt)
-    else:
-        codes = _pack_bits(c.astype(jnp.uint64), spec)
+    codes = (c.astype(code_dt) if spec.aligned
+             else _pack_bits(c.astype(jnp.uint64), spec))
     return BlockCompressed(
         codes=codes, exps=emax.astype(spec.exp_dtype), n=n, spec=spec
     )
@@ -328,10 +326,7 @@ def _decode_block(c: jax.Array, emax: jax.Array, spec: FrszSpec) -> jax.Array:
 def decompress(bc: BlockCompressed) -> jax.Array:
     """Inverse of :func:`compress`; returns the logical ``batch + (n,)`` array."""
     spec = bc.spec
-    if spec.aligned:
-        c = bc.codes
-    else:
-        c = _unpack_bits(bc.codes, spec)
+    c = bc.codes if spec.aligned else _unpack_bits(bc.codes, spec)
     x = _decode_block(c, bc.exps, spec)
     *batch, nb, bs = x.shape
     x = x.reshape(*batch, nb * bs)

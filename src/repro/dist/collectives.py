@@ -36,9 +36,11 @@ __all__ = [
     "halo_exchange",
     "halo_exchange_3d",
     "halo_wire_spec",
+    "perm_defect",
     "pmean_bytes",
     "psum",
     "reduce_bytes",
+    "rounds_defect",
 ]
 
 #: wire codec: frsz2_16 over 128-value blocks (2 B codes + 4 B/128 exps)
@@ -143,6 +145,65 @@ def compressed_psum(tree, axis_name: str):
 
 
 # ---------------------------------------------------------------------------
+# Permutation/round structure (shared by the exchanges, spmdcheck, and the
+# property tests — one definition of "well-formed" for every ppermute we issue)
+# ---------------------------------------------------------------------------
+
+
+def perm_defect(perm, axis_size: int | None = None) -> str | None:
+    """Why ``perm`` is not a partial injection on ``[0, axis_size)``.
+
+    A ``ppermute`` permutation is well-formed iff every source appears at
+    most once (a device cannot send two payloads in one collective) and
+    every destination appears at most once (two senders to one receiver
+    deadlock or clobber); unaddressed devices are fine — they send nothing
+    and receive zeros.  Returns ``None`` when well-formed, else a short
+    human-readable reason naming the offending index.
+    """
+    seen_src: set[int] = set()
+    seen_dst: set[int] = set()
+    for pair in perm:
+        try:
+            src, dst = (int(pair[0]), int(pair[1]))
+        except (TypeError, ValueError, IndexError):
+            return f"pair {pair!r} is not an (src, dst) index pair"
+        if axis_size is not None and not (
+                0 <= src < axis_size and 0 <= dst < axis_size):
+            return (f"pair ({src}, {dst}) outside the axis range "
+                    f"[0, {axis_size})")
+        if src in seen_src:
+            return f"source {src} appears twice"
+        if dst in seen_dst:
+            return f"destination {dst} appears twice"
+        seen_src.add(src)
+        seen_dst.add(dst)
+    return None
+
+
+def rounds_defect(rounds, axis_size: int | None = None) -> str | None:
+    """Why a round schedule is not a pairwise-disjoint partial-injection set.
+
+    ``rounds`` is a sequence of ppermute permutations (the 3-D halo's
+    exchange schedule): each round must be a partial injection
+    (:func:`perm_defect`) and no directed ``(src, dst)`` channel may appear
+    in two rounds — a repeated channel double-ships the same link and the
+    receive buffers would alias.  Returns ``None`` when well-formed.
+    """
+    seen_pairs: set[tuple[int, int]] = set()
+    for k, perm in enumerate(rounds):
+        defect = perm_defect(perm, axis_size)
+        if defect is not None:
+            return f"round {k}: {defect}"
+        for src, dst in perm:
+            channel = (int(src), int(dst))
+            if channel in seen_pairs:
+                return (f"round {k}: channel {channel} already used by an "
+                        "earlier round")
+            seen_pairs.add(channel)
+    return None
+
+
+# ---------------------------------------------------------------------------
 # Neighbor halo exchange (banded SpMV: boundary strips instead of all_gather)
 # ---------------------------------------------------------------------------
 
@@ -225,6 +286,9 @@ def halo_exchange_3d(x_local, send_idx, rounds, axis_name: str, *,
     Runs inside ``shard_map`` with ``axis_name`` bound; under ``jax.vmap``
     the gathers/ppermutes batch, so one exchange serves a whole RHS block.
     """
+    defect = rounds_defect(rounds)
+    if defect is not None:
+        raise ValueError(f"malformed exchange rounds: {defect}")
     bufs = [
         _ppermute(x_local[..., idx], axis_name, list(pairs), compressed)
         for idx, pairs in zip(send_idx, rounds)

@@ -86,9 +86,7 @@ class ArchConfig:
         return self.family in ("ssm", "hybrid") or self.window > 0
 
     def supports_shape(self, shape: ShapeConfig) -> bool:
-        if shape.kind == "long_decode" and not self.sub_quadratic:
-            return False
-        return True
+        return self.sub_quadratic or shape.kind != "long_decode"
 
     def param_count(self) -> int:
         """Approximate total parameters (embeddings included)."""

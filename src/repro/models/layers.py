@@ -39,10 +39,8 @@ def scan_or_unroll(body, carry, xs, *, unroll: bool = False):
         xi = jax.tree.map(lambda x, i=i: x[i], xs)
         carry, y = body(carry, xi)
         ys.append(y)
-    if ys and jax.tree.leaves(ys[0]):
-        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
-    else:
-        ys = None
+    ys = (jax.tree.map(lambda *a: jnp.stack(a), *ys)
+          if ys and jax.tree.leaves(ys[0]) else None)
     return carry, ys
 
 

@@ -41,10 +41,8 @@ def causal_conv(x, w, b, *, state=None):
     """
     B, L, C = x.shape
     W = w.shape[0]
-    if state is None:
-        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
-    else:
-        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    xp = (jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0))) if state is None
+          else jnp.concatenate([state.astype(x.dtype), x], axis=1))
     out = jnp.zeros((B, L, C), f32)
     for i in range(W):                                        # W ~ 4: unrolled
         out = out + xp[:, i:i + L].astype(f32) * w[i].astype(f32)

@@ -382,10 +382,8 @@ def _resolve(A, b, storage, policy, m, arith_dtype, matvec, precond, ortho,
         arith_dtype = b.dtype
     if matvec is None:
         row_ids = A.row_ids() if hasattr(A, "row_ids") else None
-        if row_ids is not None:
-            matvec = partial(A.matvec, row_ids=row_ids)
-        else:
-            matvec = A.matvec
+        matvec = (partial(A.matvec, row_ids=row_ids)
+                  if row_ids is not None else A.matvec)
     policy = resolve_policy(policy, storage, arith_dtype, target_rrn, m)
     n = b.shape[0]
     accs = tuple(

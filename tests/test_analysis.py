@@ -244,6 +244,58 @@ def test_raw_collective_allowed_in_collectives_home():
     assert findings == []
 
 
+def test_raw_collective_lax_module_alias():
+    findings = lint(
+        "from jax import lax as L\n"
+        "def reduce(x, axis):\n"
+        "    return L.psum(x, axis)\n",
+        path="src/repro/solver/somewhere.py",
+    )
+    assert rules_of(findings) == ["raw-collective"]
+
+
+def test_raw_collective_import_jax_lax_as():
+    findings = lint(
+        "import jax.lax as jl\n"
+        "def shift(x, axis, perm):\n"
+        "    return jl.ppermute(x, axis, perm)\n",
+        path="src/repro/sparse/somewhere.py",
+    )
+    assert rules_of(findings) == ["raw-collective"]
+
+
+def test_raw_collective_renamed_from_import():
+    findings = lint(
+        "from jax.lax import psum as p\n"
+        "def reduce(x, axis):\n"
+        "    return p(x, axis)\n",
+        path="src/repro/solver/somewhere.py",
+    )
+    assert rules_of(findings) == ["raw-collective"]
+    assert "lax.psum" in findings[0].message
+
+
+def test_raw_collective_via_functools_partial():
+    findings = lint(
+        "import functools\n"
+        "from jax import lax\n"
+        "shift = functools.partial(lax.ppermute, axis_name='basis')\n",
+        path="src/repro/sparse/somewhere.py",
+    )
+    assert rules_of(findings) == ["raw-collective"]
+    assert "functools.partial" in findings[0].message
+
+
+def test_partial_of_noncollective_ok():
+    findings = lint(
+        "import functools\n"
+        "from jax import lax\n"
+        "clip = functools.partial(lax.clamp, 0.0)\n",
+        path="src/repro/solver/somewhere.py",
+    )
+    assert findings == []
+
+
 def test_axis_index_is_not_a_collective():
     # axis_index costs no wire — deliberately outside the primitive set.
     findings = lint(
@@ -362,6 +414,76 @@ def test_transfer_guard_audit_catches_a_transfer():
     # transfer, or the clean result above proves nothing.
     import numpy as np
 
-    with pytest.raises(Exception, match="[Dd]isallow"):
-        with jax.transfer_guard("disallow"):
-            jax.numpy.sin(np.ones(4)).block_until_ready()
+    with pytest.raises(Exception, match="[Dd]isallow"), \
+            jax.transfer_guard("disallow"):
+        jax.numpy.sin(np.ones(4)).block_until_ready()
+
+
+# ---------------------------------------------------------------------------
+# CLI: output formats + rule registry
+# ---------------------------------------------------------------------------
+
+_BAD_SRC = (
+    "import jax\n"
+    "@jax.jit\n"
+    "def f(x):\n"
+    "    return float(x)\n"
+)
+
+
+def test_stage3_rules_registered():
+    from repro.analysis.rules import RULES
+
+    for rule in ("nonuniform-collective", "bad-permutation",
+                 "axis-mismatch", "wire-model", "reads-model"):
+        assert rule in RULES and RULES[rule].rationale
+
+
+def test_cli_format_json(tmp_path, capsys):
+    import json
+
+    from repro.analysis.__main__ import main
+
+    bad = tmp_path / "bad.py"
+    bad.write_text(_BAD_SRC)
+    rc = main(["--lint-only", "--paths", str(bad), "--format", "json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert [f["rule"] for f in payload] == ["host-sync"]
+    assert payload[0]["path"] == str(bad) and payload[0]["line"] == 4
+
+
+def test_cli_format_json_clean_is_empty_array(tmp_path, capsys):
+    import json
+
+    from repro.analysis.__main__ import main
+
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    rc = main(["--lint-only", "--paths", str(good), "--format", "json"])
+    assert rc == 0
+    assert json.loads(capsys.readouterr().out) == []
+
+
+def test_cli_format_github_annotations(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+
+    bad = tmp_path / "bad.py"
+    bad.write_text(_BAD_SRC)
+    rc = main(["--lint-only", "--paths", str(bad), "--format", "github"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert f"::error file={bad},line=4," in out
+    assert "title=jaxlint[host-sync]::" in out
+
+
+def test_github_annotation_for_symbolic_location():
+    from repro.analysis.__main__ import _annotation
+    from repro.analysis.report import Finding
+
+    f = Finding(path="jaxpr:device-driver", line=0, rule="wire-model",
+                message="model disagrees\nby 8 bytes")
+    ann = _annotation(f)
+    assert ann.startswith("::error title=jaxlint[wire-model]::")
+    assert "jaxpr:device-driver" in ann
+    assert "\n" not in ann and "%0A" in ann    # newline escaped

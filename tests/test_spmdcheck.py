@@ -1,0 +1,319 @@
+"""spmdcheck tests (ISSUE 9): the jaxpr uniformity walker, the wire
+pricer, and the shared permutation/round validators.
+
+The seeded-bad fixtures trace on a *1-device* mesh — ``jax.make_jaxpr``
+never validates ppermute permutations or cross-shard trip counts, which
+is exactly why stage 3 exists — so each hang/corruption class is proven
+to come back flagged with a readable equation path.  The property test
+drives :func:`repro.dist.collectives.rounds_defect` over random
+``BlockPartition`` schedules: every round a partial injection, no
+(src, dst) channel reused across rounds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from tests._hypothesis_compat import given, settings, st
+
+import repro.dist.collectives as C
+from repro.analysis.jaxprcheck import check_jaxpr
+from repro.analysis.traffic import _Unpriceable, price_program
+from repro.dist.collectives import (
+    halo_exchange_3d,
+    perm_defect,
+    rounds_defect,
+)
+from repro.sparse import block_partition, make_problem
+from repro.sparse.problems import _stencil27_box
+
+AX = "ax"
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _sharded_jaxpr(fn, *shapes):
+    """Trace ``fn`` under a 1-device shard_map with every arg sharded."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]), (AX,))
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=(P(AX),) * len(shapes),
+                      out_specs=P(AX), axis_names={AX}, check_vma=False)
+    args = [jnp.arange(float(np.prod(s))).reshape(s) for s in shapes]
+    return jax.make_jaxpr(sm)(*args)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# Part A: collective uniformity
+# ---------------------------------------------------------------------------
+
+
+def test_shard_varying_while_psum_flagged():
+    def prog(x):
+        def cond(c):
+            i, v = c
+            return i < v[0]                 # trip count reads shard data
+
+        def body(c):
+            i, v = c
+            return i + 1, v + C.psum(v, AX)
+
+        return jax.lax.while_loop(cond, body, (0, x))[1]
+
+    _sites, findings = check_jaxpr(_sharded_jaxpr(prog, (4,)),
+                                   label="fixture")
+    assert rules_of(findings) == ["nonuniform-collective"]
+    (f,) = findings
+    assert f.path == "jaxpr:fixture"
+    # the message names the offending equation and the varying loop
+    assert "psum" in f.message and "while@" in f.message
+    assert "deadlocks" in f.message
+
+
+def test_invariant_while_trip_count_clean():
+    def prog(x):
+        def cond(c):
+            i, _ = c
+            return i < 5                    # static bound: uniform
+
+        def body(c):
+            i, v = c
+            return i + 1, v + C.psum(v, AX)
+
+        return jax.lax.while_loop(cond, body, (0, x))[1]
+
+    _sites, findings = check_jaxpr(_sharded_jaxpr(prog, (4,)),
+                                   label="fixture")
+    assert findings == []
+
+
+def test_psum_derived_predicate_stays_uniform():
+    """The real solver's pattern: the convergence predicate is computed
+    from a psum, so every shard sees the same value — no finding."""
+
+    def prog(x):
+        def cond(c):
+            i, v = c
+            return i < C.psum(v, AX)[0]     # psum output is invariant
+
+        def body(c):
+            i, v = c
+            return i + 1, v * 0.5
+
+        return jax.lax.while_loop(cond, body, (0.0, x))[1]
+
+    _sites, findings = check_jaxpr(_sharded_jaxpr(prog, (4,)),
+                                   label="fixture")
+    assert findings == []
+
+
+def test_varying_cond_with_mismatched_branches_flagged():
+    def prog(x):
+        return jax.lax.cond(x[0] > 0.0,
+                            lambda v: C.psum(v, AX),
+                            lambda v: v * 2.0,       # no collective here
+                            x)
+
+    _sites, findings = check_jaxpr(_sharded_jaxpr(prog, (4,)),
+                                   label="fixture")
+    assert rules_of(findings) == ["nonuniform-collective"]
+    (f,) = findings
+    assert "cond@" in f.message and "mismatched collective sequences" \
+        in f.message
+
+
+def test_varying_cond_with_matching_branches_clean():
+    def prog(x):
+        return jax.lax.cond(x[0] > 0.0,
+                            lambda v: C.psum(v, AX),
+                            lambda v: C.psum(v * 2.0, AX),
+                            x)
+
+    _sites, findings = check_jaxpr(_sharded_jaxpr(prog, (4,)),
+                                   label="fixture")
+    assert findings == []
+
+
+def test_invariant_cond_with_mismatched_branches_clean():
+    """All shards take the same branch of an invariant predicate, so
+    differing branch sequences are fine (the solver's skip-cycle path)."""
+
+    def prog(x):
+        s = C.psum(jnp.sum(x), AX)
+        return jax.lax.cond(s > 0.0,
+                            lambda v: C.psum(v, AX),
+                            lambda v: v * 2.0,
+                            x)
+
+    _sites, findings = check_jaxpr(_sharded_jaxpr(prog, (4,)),
+                                   label="fixture")
+    assert findings == []
+
+
+def test_duplicate_source_ppermute_flagged():
+    def prog(x):
+        perm = [(0, 0), (0, 0)]             # source 0 ships twice
+        return jax.lax.ppermute(x, AX, perm)  # jaxlint: ok[raw-collective] seeded-bad fixture
+
+    _sites, findings = check_jaxpr(_sharded_jaxpr(prog, (4,)),
+                                   label="fixture")
+    assert rules_of(findings) == ["bad-permutation"]
+    (f,) = findings
+    assert "ppermute@" in f.message and "source 0 appears twice" in f.message
+
+
+def test_valid_ppermute_clean():
+    def prog(x):
+        return jax.lax.ppermute(x, AX, [(0, 0)])  # jaxlint: ok[raw-collective] fixture
+
+    _sites, findings = check_jaxpr(_sharded_jaxpr(prog, (4,)),
+                                   label="fixture")
+    assert findings == []
+
+
+def test_collective_outside_shard_map_flagged():
+    closed = jax.make_jaxpr(lambda x: C.psum(x, AX),
+                            axis_env=[(AX, 2)])(jnp.arange(4.0))
+    _sites, findings = check_jaxpr(closed, label="fixture")
+    assert rules_of(findings) == ["axis-mismatch"]
+    assert "outside any shard_map" in findings[0].message
+
+
+def test_sites_carry_operand_bytes():
+    def prog(x):
+        return C.psum(x, AX)
+
+    sites, _ = check_jaxpr(_sharded_jaxpr(prog, (4,)), label="fixture")
+    (s,) = sites
+    assert s.prim == "psum"
+    assert s.nbytes == 4 * 8 and s.size == 4
+    assert s.axes == (AX,) and s.shapes == ("f64[4]",)
+
+
+# ---------------------------------------------------------------------------
+# Part B: the wire pricer
+# ---------------------------------------------------------------------------
+
+
+def test_price_psum_under_scan_multiplies_length():
+    def prog(x):
+        def step(c, _):
+            return c + C.psum(c, AX), None
+
+        out, _ = jax.lax.scan(step, x, None, length=5)
+        return out
+
+    acc = price_program(_sharded_jaxpr(prog, (4,)))
+    assert dict(acc["solve"]) == {"dots": 5 * 4 * 8}
+    assert dict(acc["cycle"]) == {}
+
+
+def test_price_scalar_psum_is_a_norm():
+    def prog(x):
+        return x * C.psum(jnp.sum(x), AX)
+
+    acc = price_program(_sharded_jaxpr(prog, (4,)))
+    assert dict(acc["solve"]) == {"norms": 8}
+
+
+def test_price_ppermute_is_matvec_wire():
+    def prog(x):
+        return jax.lax.ppermute(x, AX, [(0, 0)])  # jaxlint: ok[raw-collective] fixture
+
+    acc = price_program(_sharded_jaxpr(prog, (4,)))
+    assert dict(acc["solve"]) == {"matvec": 4 * 8}
+
+
+def test_price_while_body_goes_to_cycle_bucket():
+    def prog(x):
+        def cond(c):
+            i, _ = c
+            return i < 3
+
+        def body(c):
+            i, v = c
+            return i + 1, v + C.psum(v, AX)
+
+        return jax.lax.while_loop(cond, body, (0, x))[1]
+
+    acc = price_program(_sharded_jaxpr(prog, (4,)))
+    assert dict(acc["solve"]) == {}
+    assert dict(acc["cycle"]) == {"dots": 4 * 8}    # per trip, priced once
+
+
+def test_price_collective_under_nested_while_unpriceable():
+    def prog(x):
+        def inner(v):
+            return jax.lax.while_loop(
+                lambda c: c[0] < 100.0,
+                lambda c: c + C.psum(c, AX), v)
+
+        def body(c):
+            i, v = c
+            return i + 1, inner(v)
+
+        return jax.lax.while_loop(lambda c: c[0] < 3, body, (0, x))[1]
+
+    with pytest.raises(_Unpriceable):
+        price_program(_sharded_jaxpr(prog, (4,)))
+
+
+# ---------------------------------------------------------------------------
+# permutation / round-schedule validators
+# ---------------------------------------------------------------------------
+
+
+def test_perm_defect_catalogue():
+    assert perm_defect([(0, 1), (1, 0)], 2) is None
+    assert perm_defect([(0, 1)], 4) is None             # partial is fine
+    assert "source 0 appears twice" in perm_defect([(0, 1), (0, 2)], 4)
+    assert "destination 1 appears twice" in perm_defect([(0, 1), (2, 1)], 4)
+    assert "outside the axis range" in perm_defect([(0, 9)], 4)
+    assert "not an (src, dst)" in perm_defect([(0,)], 4)
+
+
+def test_rounds_defect_flags_reused_channel():
+    good = (((0, 1), (1, 0)), ((0, 2),))
+    assert rounds_defect(good, 4) is None
+    reused = (((0, 1),), ((0, 1),))
+    assert "channel (0, 1) already used" in rounds_defect(reused, 4)
+    assert "round 1" in rounds_defect(reused, 4)
+    assert "round 0" in rounds_defect((((2, 2), (2, 3)),), 4)
+
+
+def test_halo_exchange_3d_rejects_malformed_rounds():
+    idx = (np.zeros((1, 2), dtype=np.int64),) * 2
+    with pytest.raises(ValueError, match="malformed exchange rounds"):
+        halo_exchange_3d(jnp.zeros(4), idx, (((0, 1),), ((0, 1),)), AX)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_block_partition_rounds_property(seed):
+    """Every block_partition exchange schedule — random grids, shard
+    counts, forced process grids, and the unstructured chain fallback —
+    is a pairwise-disjoint set of partial injections."""
+    rng = np.random.default_rng(seed)
+    nx, ny, nz = (int(d) for d in rng.integers(3, 7, size=3))
+    A = _stencil27_box(nx, ny, nz)
+    A.grid = (nx, ny, nz)
+    P_ = int(rng.choice([2, 3, 4]))
+    blk = block_partition(A, P_)
+    assert rounds_defect(blk.rounds, P_) is None
+
+
+def test_block_partition_rounds_fixed_cases():
+    A = _stencil27_box(4, 4, 4)
+    A.grid = (4, 4, 4)
+    for pgrid in ((2, 2, 2), (1, 2, 4), None):
+        blk = block_partition(A, 8, pgrid=pgrid)
+        assert rounds_defect(blk.rounds, 8) is None
+    # unstructured fallback: banded operator, cells form a 1-D chain
+    B, _ = make_problem("synth:atmosmod", 96)
+    blk = block_partition(B, 4, pgrid=(4, 1, 1))
+    assert rounds_defect(blk.rounds, 4) is None
