@@ -13,7 +13,12 @@
 | LM cells roofline (§Roofline) | benchmarks.lm_roofline        |
 | sharded-solve wire bytes      | benchmarks.shard_wire         |
 | block vs vmap multi-RHS       | benchmarks.block_gmres        |
+| fused-kernel bandwidth        | benchmarks.kernel_bw          |
 
+``kernel_bw`` refreshes the committed ``BENCH_kernel_bw.json`` snapshot
+(effective decode/contraction bandwidth of the fused Pallas kernels vs
+the device memcpy rate, per (kernel, format, p, n) cell) with its
+oracle-parity ``--check`` gate enforced.
 ``block_gmres`` also refreshes the committed ``BENCH_gmres.json``
 snapshot (per-problem iterations, modelled bytes, wall time, and the
 block-vs-vmap traffic ratio); ``shard_wire`` refreshes
@@ -40,6 +45,7 @@ def main(argv=None):
         block_gmres,
         convergence_curves,
         iteration_table,
+        kernel_bw,
         lm_roofline,
         mixed_sweep,
         shard_wire,
@@ -72,6 +78,12 @@ def main(argv=None):
         # refreshes the committed snapshot of block-vs-vmap traffic
         "block_gmres": lambda: block_gmres.snapshot(
             "BENCH_gmres.json", n=1000 if args.quick else 2000),
+        # refreshes the committed fused-kernel bandwidth snapshot with
+        # the oracle-parity gate enforced
+        "kernel_bw": lambda: kernel_bw.snapshot(
+            "BENCH_kernel_bw.json",
+            ns=(2048, 8192) if args.quick else kernel_bw.DEFAULT_NS,
+            ps=(4,) if args.quick else kernel_bw.DEFAULT_PS),
     }
     failed = []
     for name, fn in suites.items():

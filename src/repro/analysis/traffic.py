@@ -37,7 +37,12 @@ Three audits:
     pass, ``max_iters = k*m`` forces exactly ``k`` full cycles) whose
     ``bytes_read`` must equal ``cycles x _cycle_row_reads(m) x row_bytes``
     with ``row_bytes`` taken from the *store avals*, and whose
-    ``op_reads`` must equal ``1 + cycles x (m + 2)``.
+    ``op_reads`` must equal ``1 + cycles x (m + 2)``.  The same audit
+    runs against the *block* driver (shared basis, p right-hand sides,
+    including the FRSZ2 fused-kernel route): one stored block row serves
+    all p columns, so the identical per-row formula must hold with the
+    block accessor's segment-aligned ``row_bytes`` — the fused kernels
+    change how bytes are *read*, never how many.
 """
 from __future__ import annotations
 
@@ -251,6 +256,97 @@ def run_local_traffic() -> list[Finding]:
             findings.append(_finding(label, "reads-model", (
                 f"op_reads reports {got_reads} but the trajectory applies "
                 f"the operator 1 + {cycles} x ({m} + 2) = "
+                f"{expect_reads} times")))
+    findings += _local_block_reads()
+    return findings
+
+
+def _local_block_reads() -> list[Finding]:
+    """The block-driver half of the basis-reads audit.
+
+    Same fixed trajectory (``target_rrn=0``, CGS2, ``max_iters = k*m``),
+    but through :func:`repro.solver.block.build_block_solve` with ``p``
+    right-hand sides — and with the FRSZ2 storage on its fused-kernel
+    route, so the audit holds the decode-inside-contraction kernels to
+    the exact same byte accounting as the jnp route: the shared block row
+    (``p`` segment-aligned segments) is priced once per read, from the
+    store avals.
+    """
+    from repro.analysis.traceaudit import _pin_environment, _problem, _walk_eqns
+    from repro.core.accessor import format_by_name
+    from repro.solver.block import build_block_solve
+    from repro.solver.gmres import _cycle_row_reads
+
+    _pin_environment()
+    findings: list[Finding] = []
+    A, _, _ = _problem()
+    n = A.shape[0]
+    m, k, p = 4, 2, 3
+    rng = np.random.default_rng(0)
+    B = jnp.asarray(rng.standard_normal((p, n)))
+    B = B / jnp.linalg.norm(B, axis=1, keepdims=True)
+    storages = (
+        ("float64", "float64"),
+        ("frsz2_32+kernels", format_by_name("frsz2_32", use_kernels=True)),
+    )
+    for name, storage in storages:
+        label = f"block-reads[{name}]"
+        solve, accs = build_block_solve(
+            A, B, storage=storage, ortho="cgs2", m=m, max_iters=k * m,
+            target_rrn=0.0)
+        acc = accs[0]
+        vec = jax.ShapeDtypeStruct(B.shape, B.dtype)
+
+        shapes = jax.eval_shape(solve, vec, vec)
+        aval_bytes = sum(
+            int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+            for leaf in jax.tree.leaves(shapes["stores"]))
+        row_bytes = aval_bytes / acc.m
+        model_row = acc.nbytes() / acc.m
+        if row_bytes != model_row:
+            findings.append(_finding(label, "reads-model", (
+                f"block store avals hold {row_bytes} B per basis row but "
+                f"{type(acc.fmt).__name__}.nbytes() models {model_row} B — "
+                "the segment-aligned storage accounting does not match the "
+                "actual buffers")))
+            continue
+
+        closed = jax.make_jaxpr(solve)(vec, vec)
+        lengths = sorted({int(e.params["length"])
+                          for e in _walk_eqns(closed.jaxpr)
+                          if e.primitive.name == "scan"})
+        if m not in lengths:
+            findings.append(_finding(label, "reads-model", (
+                f"could not recover the block cycle trip count from the "
+                f"jaxpr: scan lengths {lengths} do not include m={m}")))
+            continue
+
+        state = jax.tree.map(np.asarray,
+                             jax.jit(solve)(B, jnp.zeros_like(B)))
+        cycles = int(state["cycles"])
+        total = np.asarray(state["total"])  # per-column iteration counts
+        if cycles != k or not np.all(total == k * m):
+            findings.append(_finding(label, "reads-model", (
+                f"fixed-trajectory assumption broke: ran {cycles} block "
+                f"cycles / per-column iterations {total.tolist()}, "
+                f"expected {k} cycles / {k * m} everywhere — the audit's "
+                "premises no longer hold, fix the audit")))
+            continue
+
+        expect = float(cycles * _cycle_row_reads(m, 2, 0) * row_bytes)
+        got = float(state["nbytes"])
+        if got != expect:
+            findings.append(_finding(label, "reads-model", (
+                f"block bytes_read reports {got} B but {cycles} cycles x "
+                f"_cycle_row_reads({m}, passes=2) x {row_bytes} B/row "
+                f"(from the store avals, one shared row for all p={p} "
+                f"right-hand sides) = {expect} B")))
+        expect_reads = 1.0 + cycles * (m + 2)
+        got_reads = float(state["op_reads"])
+        if got_reads != expect_reads:
+            findings.append(_finding(label, "reads-model", (
+                f"block op_reads reports {got_reads} but the trajectory "
+                f"applies the batched operator 1 + {cycles} x ({m} + 2) = "
                 f"{expect_reads} times")))
     return findings
 

@@ -41,6 +41,7 @@ the solver stack needs to change.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections.abc import Callable
 from typing import Any
 
@@ -48,6 +49,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import frsz2 as F
+
+#: VREG lane count of the Pallas kernel layouts (repro.kernels.ops.LANES,
+#: duplicated here so the core protocol does not import the kernel stack).
+_KERNEL_LANES = 128
 
 __all__ = [
     "StorageFormat",
@@ -147,6 +152,38 @@ class StorageFormat:
         """y = h @ V (unmasked)."""
         V = self.read_all(store, arith_dtype, n)
         return h.astype(arith_dtype) @ V
+
+    # -- block-basis contract -------------------------------------------------
+    def block_align(self) -> int:
+        """Per-RHS segment alignment for flattened block rows.
+
+        :class:`BlockBasisAccessor` flattens each ``(p, n)`` block row to
+        one storage row of ``p`` segments, each padded to this multiple.
+        Formats whose representation has internal block structure return
+        an alignment that keeps every segment starting on a block *and*
+        kernel-lane boundary (so the fused block kernels can view the flat
+        row as ``(p, n_seg)`` with no codec block straddling a segment
+        edge); ``1`` means pack segments tightly.
+        """
+        return 1
+
+    def block_dots(self, store, W, arith_dtype, n: int, p: int, n_seg: int):
+        """``H[i,a,b] = <V[i,a], W[b]>`` over the flattened block basis
+        (unmasked, local — :class:`ShardedFormat` adds the reduction).
+
+        The store holds rows of ``p`` segments of ``n_seg`` elements; the
+        trailing ``n_seg - n`` of each segment are zero padding.
+        """
+        V = self.read_all(store, arith_dtype, p * n_seg)
+        V = V.reshape(-1, p, n_seg)[..., :n]
+        return jnp.einsum("ian,bn->iab", V, W.astype(arith_dtype))
+
+    def block_combine(self, store, Y, arith_dtype, n: int, p: int,
+                      n_seg: int):
+        """``out[b] = sum_{i,a} Y[i,a,b] V[i,a]``, returned in the padded
+        segment layout ``(b, n_seg)`` (the accessor trims to ``n``)."""
+        V = self.read_all(store, arith_dtype, p * n_seg).reshape(-1, p, n_seg)
+        return jnp.einsum("iab,ian->bn", Y.astype(arith_dtype), V)
 
 
 # ---------------------------------------------------------------------------
@@ -265,6 +302,35 @@ class FrszFormat(StorageFormat):
             return kops.rmatvec(bc, h.astype(self.spec.dtype)).astype(arith_dtype)
         return super().combine(store, h, arith_dtype, n)
 
+    def block_align(self) -> int:
+        # segments start on both a codec-block and a VREG-lane boundary:
+        # the fused block kernels then view the flat row as (p, n_seg)
+        # with no FRSZ2 block straddling a segment edge.  Quantization
+        # boundaries inside the data region are bs-aligned either way, so
+        # the jnp and kernel routes see identical stored values.
+        return math.lcm(self.spec.bs, _KERNEL_LANES)
+
+    def block_dots(self, store, W, arith_dtype, n: int, p: int, n_seg: int):
+        if self.use_kernels:
+            from repro.kernels import ops as kops
+
+            H = kops.block_dots(self._as_bc(store, p * n_seg),
+                                W.astype(self.spec.dtype), p=p)
+            if H is not None:
+                return H.astype(arith_dtype)
+        return super().block_dots(store, W, arith_dtype, n, p, n_seg)
+
+    def block_combine(self, store, Y, arith_dtype, n: int, p: int,
+                      n_seg: int):
+        if self.use_kernels:
+            from repro.kernels import ops as kops
+
+            out = kops.block_combine(self._as_bc(store, p * n_seg),
+                                     Y.astype(self.spec.dtype), p=p)
+            if out is not None:
+                return out.astype(arith_dtype)
+        return super().block_combine(store, Y, arith_dtype, n, p, n_seg)
+
     def nbytes(self, m: int, n: int) -> int:
         return m * F.storage_nbytes(n, self.spec)
 
@@ -363,6 +429,25 @@ class MixedFormat(StorageFormat):
         return (self.head.combine(store["head"], h[:kh], arith_dtype, n)
                 + self.tail.combine(store["tail"], h[kh:], arith_dtype, n))
 
+    def block_align(self) -> int:
+        # one shared alignment for both sub-stores: head and tail rows of
+        # the same basis must agree on the segment layout
+        return math.lcm(self.head.block_align(), self.tail.block_align())
+
+    def block_dots(self, store, W, arith_dtype, n: int, p: int, n_seg: int):
+        return jnp.concatenate(
+            [self.head.block_dots(store["head"], W, arith_dtype, n, p, n_seg),
+             self.tail.block_dots(store["tail"], W, arith_dtype, n, p,
+                                  n_seg)], axis=0)
+
+    def block_combine(self, store, Y, arith_dtype, n: int, p: int,
+                      n_seg: int):
+        kh = self.head.rows(store["head"])
+        return (self.head.block_combine(store["head"], Y[:kh], arith_dtype,
+                                        n, p, n_seg)
+                + self.tail.block_combine(store["tail"], Y[kh:], arith_dtype,
+                                          n, p, n_seg))
+
     def nbytes(self, m: int, n: int) -> int:
         kh, kt = self._split(m)
         return self.head.nbytes(kh, n) + self.tail.nbytes(kt, n)
@@ -435,6 +520,18 @@ class ShardedFormat(StorageFormat):
     def combine(self, store, h, arith_dtype, n: int):
         return self.inner.combine(store, h, arith_dtype, n)
 
+    def block_align(self) -> int:
+        return self.inner.block_align()
+
+    def block_dots(self, store, W, arith_dtype, n: int, p: int, n_seg: int):
+        local = self.inner.block_dots(store, W, arith_dtype, n, p, n_seg)
+        return self.reduce_partials(local).astype(arith_dtype)
+
+    def block_combine(self, store, Y, arith_dtype, n: int, p: int,
+                      n_seg: int):
+        # purely local, like scalar combine: the result is the local chunk
+        return self.inner.block_combine(store, Y, arith_dtype, n, p, n_seg)
+
     def nbytes(self, m: int, n: int) -> int:
         return self.inner.nbytes(m, n)
 
@@ -500,25 +597,29 @@ class BlockBasisAccessor:
     :class:`StorageFormat` protocol.
 
     Each block row (the ``p`` simultaneous Krylov directions of one Arnoldi
-    step) is flattened to a single length ``p*n`` storage row, so every
-    registered format — native dtypes, FRSZ2, mixed head/tail, sharded
-    wrappers — holds block bases without modification (FRSZ2 blocks may
-    straddle column boundaries inside a row; the codec is
-    position-agnostic, only the per-block max scale shifts).  ``nbytes``
-    therefore prices the *shared* basis once, which is exactly the traffic
-    amortization block-GMRES buys: one stored row serves all ``p``
-    right-hand sides.
+    step) is flattened to a single storage row of ``p`` *segments*, one per
+    right-hand side, each zero-padded to the format's ``block_align()``
+    multiple (``n_seg``).  Native formats pack tightly (``n_seg == n``);
+    FRSZ2 aligns segments to codec-block/VREG boundaries so the fused block
+    kernels can view the flat row as ``(p, n_seg)`` with no block straddling
+    a segment edge — zero pad blocks round-trip to exact zeros, so the
+    contractions are unaffected and only ``nbytes`` prices the (small)
+    alignment overhead.  ``nbytes`` prices the *shared* basis once, which is
+    exactly the traffic amortization block-GMRES buys: one stored row serves
+    all ``p`` right-hand sides.
 
-    The two hot contractions generalize the accessor's ``dots``/``combine``:
+    The two hot contractions generalize the accessor's ``dots``/``combine``
+    and dispatch through the :class:`StorageFormat` protocol (so FRSZ2
+    routes them through the fused decode-inside-contraction kernels under
+    ``use_kernels``, mixed stores split head/tail, and sharded stores
+    reduce partials over their mesh axis):
 
-      * ``block_dots(store, W)``   — ``H[i,a,b] = <V[i,a], W[b]>``, one
-        einsum over the whole basis instead of ``p`` row-dot sweeps;
+      * ``block_dots(store, W)``   — ``H[i,a,b] = <V[i,a], W[b]>``;
       * ``block_combine(store, Y)`` — ``out[b] = sum_{i,a} Y[i,a,b] V[i,a]``.
 
-    Sharded stores hold the local ``(p, n_local)`` chunk of each block row
-    flattened locally; contractions reduce through the format's
-    ``reduce_partials`` hook, keeping the wire transport decision with the
-    format (as for scalar ``dots``).
+    Masking (the only accessor-level concern, as for the scalar accessor)
+    is applied here — after the format's ``block_dots`` and before its
+    ``block_combine`` — so fused kernel paths see unmasked inputs.
     """
 
     fmt: Any
@@ -528,31 +629,42 @@ class BlockBasisAccessor:
     arith_dtype: Any = jnp.float64
 
     @property
+    def n_seg(self) -> int:
+        """Aligned per-RHS segment length inside one flattened row."""
+        a = self.fmt.block_align()
+        return -(-self.n // a) * a
+
+    @property
     def n_flat(self) -> int:
-        return self.p * self.n
+        return self.p * self.n_seg
 
     def empty(self):
         return self.fmt.empty(self.m, self.n_flat)
 
+    def _pad_seg(self, W):
+        if self.n_seg == self.n:
+            return W
+        return jnp.pad(W, ((0, 0), (0, self.n_seg - self.n)))
+
     def write_block(self, store, j, W):
         """Store block row j from ``W (p, n)`` (compress)."""
-        return self.fmt.write_row(store, j, W.reshape(self.n_flat))
+        return self.fmt.write_row(store, j,
+                                  self._pad_seg(W).reshape(self.n_flat))
 
     def read_block(self, store, j):
         """Decompress block row j back to ``(p, n)``."""
         v = self.fmt.read_row(store, j, self.arith_dtype, self.n_flat)
-        return v.reshape(self.p, self.n)
+        return v.reshape(self.p, self.n_seg)[:, : self.n]
 
     def read_all_blocks(self, store):
         V = self.fmt.read_all(store, self.arith_dtype, self.n_flat)
-        return V.reshape(self.m, self.p, self.n)
+        return V.reshape(self.m, self.p, self.n_seg)[..., : self.n]
 
     # -- hot loops ------------------------------------------------------------
     def block_dots(self, store, W, row_mask=None):
         """``H[i, a, b] = <V[i, a], W[b]>`` with masked block rows zeroed."""
-        V = self.read_all_blocks(store)
-        H = jnp.einsum("ian,bn->iab", V, W.astype(self.arith_dtype))
-        H = self.fmt.reduce_partials(H).astype(self.arith_dtype)
+        H = self.fmt.block_dots(store, W, self.arith_dtype, self.n, self.p,
+                                self.n_seg).astype(self.arith_dtype)
         if row_mask is not None:
             H = jnp.where(row_mask[:, None, None], H, 0.0)
         return H
@@ -562,8 +674,9 @@ class BlockBasisAccessor:
         sharded — no collective, mirroring scalar ``combine``)."""
         if row_mask is not None:
             Y = jnp.where(row_mask[:, None, None], Y, 0.0)
-        V = self.read_all_blocks(store)
-        return jnp.einsum("iab,ian->bn", Y.astype(self.arith_dtype), V)
+        out = self.fmt.block_combine(store, Y, self.arith_dtype, self.n,
+                                     self.p, self.n_seg)
+        return out.astype(self.arith_dtype)[:, : self.n]
 
     def nbytes(self) -> int:
         return self.fmt.nbytes(self.m, self.n_flat)

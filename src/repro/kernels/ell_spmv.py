@@ -1,0 +1,88 @@
+"""Pallas ELL SpMV, with an optional fused FRSZ2 decode of the operand.
+
+ELLPACK is the solver's padded sparse layout (``repro.sparse.csr.ELL``):
+``vals``/``cols (nr, w)`` with padding slots ``val 0, col 0``.  The kernel
+tiles the row dimension; each grid step loads a ``(bm, w)`` slab of values
+and column indices, gathers the operand entries, and reduces along the
+width axis.  The operand vector stays resident in VMEM across the whole
+grid (one HBM read), so the traffic per matvec is the matrix slab stream
+plus one vector read — the ELL roofline.
+
+The fused variant takes the operand as FRSZ2 codes + exponents and expands
+it in-register before the gather: the compressed-halo transport
+(``repro.sparse.shard``, PR 4) can then feed a matvec directly from wire
+codes without a separate decompress kernel materializing the uncompressed
+vector in HBM first.
+
+Padding contract: row padding (both the ELL width padding and the wrapper's
+row-count padding) uses ``val 0, col 0`` so padded slots contribute
+``0 * x[0]``; operand padding is zero-filled and never gathered (all real
+column indices are < nc).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import frsz2 as F
+from repro.kernels.frsz2_dot import _decode_tile
+
+
+def _gather_reduce(v, c, x):
+    """(bm, w) vals + cols, (nc,) operand -> (bm, 1) row sums."""
+    g = jnp.take(x, c, axis=0)
+    return jnp.sum(v * g.astype(v.dtype), axis=1, keepdims=True)
+
+
+def _ell_kernel(v_ref, c_ref, x_ref, o_ref):
+    o_ref[...] = _gather_reduce(v_ref[...], c_ref[...], x_ref[0, :])
+
+
+def ell_spmv_2d(vals, cols, x, *, bm: int = 256, interpret: bool = False):
+    """vals/cols (nr, w), x (1, nc) -> y (nr, 1) = ELL @ x."""
+    nr, w = vals.shape
+    assert nr % bm == 0, (nr, bm)
+    grid = (nr // bm,)
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, 1), vals.dtype),
+        interpret=interpret,
+    )(vals, cols, x)
+
+
+def _ell_frsz2_kernel(v_ref, c_ref, xc_ref, xe_ref, o_ref, *,
+                      spec: F.FrszSpec):
+    x = _decode_tile(xc_ref[...], xe_ref[...], spec)[0, :]
+    o_ref[...] = _gather_reduce(v_ref[...], c_ref[...], x)
+
+
+def ell_spmv_frsz2_2d(vals, cols, xcodes, xexps, spec: F.FrszSpec, *,
+                      bm: int = 256, interpret: bool = False):
+    """vals/cols (nr, w), operand codes (1, nc) + exps (1, nc/bs) ->
+    y (nr, 1) = ELL @ decompress(x), decoded in-register per grid step."""
+    nr, w = vals.shape
+    assert nr % bm == 0, (nr, bm)
+    grid = (nr // bm,)
+    return pl.pallas_call(
+        functools.partial(_ell_frsz2_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec(xcodes.shape, lambda i: (0, 0)),
+            pl.BlockSpec(xexps.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, 1), vals.dtype),
+        interpret=interpret,
+    )(vals, cols, xcodes, xexps)

@@ -1,0 +1,116 @@
+"""Fused decompress + block-contraction Pallas kernels (block-GMRES hot loop).
+
+Block-GMRES (``repro.solver.block``) carries one shared Krylov basis of
+*block vectors* ``V (m, p, n)``; every Arnoldi sweep reads it twice —
+``H[i,a,b] = <V[i,a], W[b]>`` (block dots) and ``W -= sum Y[i,a,b] V[i,a]``
+(block combine).  The flattened block rows live in FRSZ2 storage, and before
+these kernels the contractions went through ``read_all`` — the decoded
+``(m, p, n)`` basis materialized in HBM, the exact round-trip the paper's
+in-register Accessor exists to avoid, multiplied by ``p``.
+
+These kernels generalize ``frsz2_dot.matvec_2d``/``rmatvec_2d`` from one
+right-hand side to ``q`` of them: each grid step decodes a ``(bm, bn)`` code
+tile in-register and feeds the MXU with all ``q`` columns at once, so the
+decode cost is amortized over the whole block (Clark et al.'s fused
+block-Krylov contraction, on top of the FRSZ2 read path).
+
+Layouts (wrappers in ops.py produce them from the flattened block store):
+  codes: (M, n)  one aligned code per element, M = m * p block-segment rows
+  exps:  (M, n // bs)
+  X:     (n, q)   /   Y: (q, M)
+
+Accuracy contract matches ``frsz2_dot``: cross-tile accumulation is Kahan
+compensated in the storage dtype; the ops.py wrappers size tiles so common
+basis shapes reduce in a single MXU dot (bit-identical to the jnp oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import frsz2 as F
+from repro.kernels.frsz2_dot import _decode_tile, _kahan_accumulate
+
+
+# ---------------------------------------------------------------------------
+# Y (M, q) = decompress(V) @ X (n, q) — the block-dots contraction
+# ---------------------------------------------------------------------------
+
+
+def _block_dots_kernel(c_ref, e_ref, x_ref, o_ref, comp_ref, *,
+                       spec: F.FrszSpec):
+    vals = _decode_tile(c_ref[...], e_ref[...], spec)
+    part = jnp.dot(vals, x_ref[...], preferred_element_type=spec.dtype)
+    _kahan_accumulate(o_ref, comp_ref, part, pl.program_id(1))
+
+
+def block_dots_2d(codes, exps, X, spec: F.FrszSpec, *, bm: int = 8,
+                  bn: int = 2048, interpret: bool = False):
+    """codes (M, n), exps (M, n/bs), X (n, q) -> Y (M, q).
+
+    One decode of each basis tile serves all q right-hand sides; the n
+    reduction is Kahan-compensated across tiles exactly like ``matvec_2d``
+    (q = 1 recovers it).
+    """
+    m, n = codes.shape
+    q = X.shape[1]
+    eb = bn // spec.bs
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_block_dots_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, k: (i, k)),
+            pl.BlockSpec((bm, eb), lambda i, k: (i, k)),
+            pl.BlockSpec((bn, q), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, q), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, q), spec.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, q), spec.dtype)],
+        interpret=interpret,
+    )(codes, exps, X)
+
+
+# ---------------------------------------------------------------------------
+# out (q, n) = Y (q, M) @ decompress(V) — the block-combine contraction
+# ---------------------------------------------------------------------------
+
+
+def _block_combine_kernel(c_ref, e_ref, y_ref, o_ref, comp_ref, *,
+                          spec: F.FrszSpec):
+    vals = _decode_tile(c_ref[...], e_ref[...], spec)
+    part = jnp.dot(y_ref[...], vals, preferred_element_type=spec.dtype)
+    _kahan_accumulate(o_ref, comp_ref, part, pl.program_id(1))
+
+
+def block_combine_2d(codes, exps, Y, spec: F.FrszSpec, *, bm: int = 8,
+                     bn: int = 2048, interpret: bool = False):
+    """codes (M, n), exps (M, n/bs), Y (q, M) -> out (q, n).
+
+    Grid iterates n-tiles in the *outer* loop and M-tiles inner so each
+    output tile finalizes once (the M reduction is innermost), mirroring
+    ``rmatvec_2d`` with q output rows instead of one.
+    """
+    m, n = codes.shape
+    q = Y.shape[0]
+    eb = bn // spec.bs
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        functools.partial(_block_combine_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, k: (k, j)),
+            pl.BlockSpec((bm, eb), lambda j, k: (k, j)),
+            pl.BlockSpec((q, bm), lambda j, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((q, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n), spec.dtype),
+        scratch_shapes=[pltpu.VMEM((q, bn), spec.dtype)],
+        interpret=interpret,
+    )(codes, exps, Y)

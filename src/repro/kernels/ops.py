@@ -20,6 +20,7 @@ Kernel-path constraints (TPU alignment, see frsz2_kernel.py docstring):
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
@@ -29,6 +30,8 @@ import numpy as np
 from repro.core import frsz2 as F
 from repro.kernels import frsz2_kernel as K
 from repro.kernels import frsz2_dot as KD
+from repro.kernels import frsz2_block as KB
+from repro.kernels import ell_spmv as KE
 from repro.kernels import decode_attn as KA
 
 LANES = 128
@@ -58,11 +61,30 @@ def kernel_supported(spec: F.FrszSpec) -> bool:
     return spec.aligned and spec.l <= 32 and LANES % spec.bs == 0
 
 
-def _pick_block_rows(M: int, cap: int = 256) -> int:
-    for br in (cap, 128, 64, 32, 16, 8, 4, 2, 1):
-        if br <= cap and M % br == 0:
-            return br
-    return 1
+@functools.lru_cache(maxsize=4096)
+def _pick_block_rows(M: int, cap: int = 256) -> tuple[int, int]:
+    """``(M_pad, br)``: rows padded to a supported multiple, then tiled.
+
+    Earlier revisions returned the largest divisor of the *raw* row count,
+    which degenerated to a row-per-grid-step kernel (``br=1``) for prime or
+    odd ``M``.  Rows are now padded up to the f32 sublane multiple (8)
+    first, so the chosen tile is always >= 8 rows; callers slice the pad
+    rows back off the kernel output.
+    """
+    M_pad = max(8, -(-M // 8) * 8)
+    for br in (cap, 128, 64, 32, 16, 8):
+        if br <= cap and M_pad % br == 0:
+            return M_pad, br
+    return M_pad, 8
+
+
+def _pad_rows_to(a: jax.Array, rows: int, axis: int = 0) -> jax.Array:
+    pad = rows - a.shape[axis]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
 
 
 def _pad_rows(a: jax.Array, mult: int, axis: int = 0):
@@ -95,8 +117,9 @@ def compress(x: jax.Array, spec: F.FrszSpec, *, interpret: bool | None = None
         return F.compress(x, spec)  # too ragged for the 128-lane layout
     xp = jnp.pad(x, [(0, 0)] * len(batch) + [(0, n_pad - n)]) if n_pad != n else x
     x2d = xp.reshape(-1, LANES).astype(spec.dtype)
-    x2d, M = _pad_rows(x2d, 8)
-    br = _pick_block_rows(x2d.shape[0])
+    M = x2d.shape[0]
+    M_pad, br = _pick_block_rows(M)
+    x2d = _pad_rows_to(x2d, M_pad)
     codes2d, exps2d = K.compress_2d(x2d, spec, block_rows=br, interpret=interpret)
     codes = codes2d[:M].reshape(*batch, nb, spec.bs)
     exps = exps2d[:M].reshape(*batch, nb)
@@ -117,9 +140,10 @@ def decompress(bc: F.BlockCompressed, *, interpret: bool | None = None) -> jax.A
     G = LANES // spec.bs
     codes2d = bc.codes.reshape(-1, LANES)
     exps2d = bc.exps.reshape(-1, G)
-    codes2d, M = _pad_rows(codes2d, 8)
-    exps2d, _ = _pad_rows(exps2d, 8)
-    br = _pick_block_rows(codes2d.shape[0])
+    M = codes2d.shape[0]
+    M_pad, br = _pick_block_rows(M)
+    codes2d = _pad_rows_to(codes2d, M_pad)
+    exps2d = _pad_rows_to(exps2d, M_pad)
     x2d = K.decompress_2d(codes2d, exps2d, spec, block_rows=br, interpret=interpret)
     x = x2d[:M].reshape(*batch, nb * bs)
     return x[..., : bc.n]
@@ -152,6 +176,29 @@ def _tile_n(n_pad: int, bn: int, bs: int) -> int:
     return max(bn_eff, bs)
 
 
+@functools.lru_cache(maxsize=4096)
+def _dot_layout(m: int, n_pad: int, bs: int, bn: int):
+    """``(ok, m_pad, bn_eff)`` for the fused basis contractions.
+
+    Memoized on the (shape, spec) key: repeated same-shape solves — every
+    warm GMRES cycle — skip the host-side tile arithmetic entirely.
+    """
+    bn_eff = _tile_n(n_pad, bn, bs)
+    ok = n_pad % bn_eff == 0 and bn_eff % LANES == 0
+    m_pad, _ = _pick_block_rows(m)
+    return ok, m_pad, bn_eff
+
+
+@functools.lru_cache(maxsize=4096)
+def _reduce_layout(m: int, n_pad: int, bs: int, bn: int):
+    """``_dot_layout`` plus the row-reduction tile ``bm_eff``: a single-tile
+    m reduction when the whole decoded tile fits VMEM (the contraction is
+    then one MXU dot, no cross-tile accumulation at all)."""
+    ok, m_pad, bn_eff = _dot_layout(m, n_pad, bs, bn)
+    one_tile = m_pad <= 512 and m_pad * bn_eff * 4 <= 4 * 1024 * 1024
+    return ok, m_pad, bn_eff, (m_pad if one_tile else 8)
+
+
 def matvec(bc: F.BlockCompressed, x: jax.Array, *, bn: int = 2048,
            interpret: bool | None = None) -> jax.Array:
     """y = decompress(V) @ x  for V (m, n) compressed row-wise.
@@ -172,15 +219,16 @@ def matvec(bc: F.BlockCompressed, x: jax.Array, *, bn: int = 2048,
     if interpret is None:
         interpret = _default_interpret()
     codes, exps, n_pad = _basis_2d(bc)
+    m = codes.shape[0]
+    ok, m_pad, bn_eff = _dot_layout(m, n_pad, spec.bs, bn)
+    if not ok:
+        V = F.decompress(bc)
+        return V @ x.astype(V.dtype)
     xp = x.astype(spec.dtype)
     if n_pad != bc.n:
         xp = jnp.pad(xp, (0, n_pad - bc.n))
-    bn_eff = _tile_n(n_pad, bn, spec.bs)
-    if n_pad % bn_eff or bn_eff % LANES:
-        V = F.decompress(bc)
-        return V @ x.astype(V.dtype)
-    codes, m = _pad_rows(codes, 8)
-    exps, _ = _pad_rows(exps, 8)
+    codes = _pad_rows_to(codes, m_pad)
+    exps = _pad_rows_to(exps, m_pad)
     y = KD.matvec_2d(codes, exps, xp[:, None], spec, bm=8, bn=bn_eff,
                      interpret=interpret)
     return y[:m, 0]
@@ -205,21 +253,171 @@ def rmatvec(bc: F.BlockCompressed, h: jax.Array, *, bn: int = 2048,
     if interpret is None:
         interpret = _default_interpret()
     codes, exps, n_pad = _basis_2d(bc)
-    bn_eff = _tile_n(n_pad, bn, spec.bs)
-    if n_pad % bn_eff or bn_eff % LANES:
+    m = codes.shape[0]
+    ok, m_pad, bn_eff, bm_eff = _reduce_layout(m, n_pad, spec.bs, bn)
+    if not ok:
         V = F.decompress(bc)
         return h.astype(V.dtype) @ V
-    codes, m = _pad_rows(codes, 8)
-    exps, _ = _pad_rows(exps, 8)
-    # single-tile m reduction when the whole decoded tile fits VMEM: the
-    # contraction is then one MXU dot (no cross-tile accumulation at all)
-    m_pad = codes.shape[0]
-    one_tile = m_pad <= 512 and m_pad * bn_eff * 4 <= 4 * 1024 * 1024
-    bm_eff = m_pad if one_tile else 8
+    codes = _pad_rows_to(codes, m_pad)
+    exps = _pad_rows_to(exps, m_pad)
     hp = jnp.pad(h.astype(spec.dtype), (0, m_pad - m))
     y = KD.rmatvec_2d(codes, exps, hp[None, :], spec, bm=bm_eff, bn=bn_eff,
                       interpret=interpret)
     return y[0, : bc.n]
+
+
+# ---------------------------------------------------------------------------
+# fused block contractions over a flattened block basis V (m, p * n_seg)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=4096)
+def _block_layout(m: int, p: int, n_flat: int, bs: int, bn: int):
+    """``(ok, n_seg, m_pad, bn_eff)`` for the block contractions.
+
+    The flattened store holds ``m`` rows of ``p`` segments, each ``n_seg``
+    elements; the kernels view it as ``(m * p, n_seg)``, which requires the
+    segment length to be a whole number of codec blocks *and* of VREG lane
+    groups (``BlockBasisAccessor`` aligns segments via ``block_align`` so
+    this holds for every store it builds).
+    """
+    if p <= 0 or n_flat % p:
+        return False, 0, 0, 0
+    n_seg = n_flat // p
+    if n_seg % bs:
+        return False, n_seg, 0, 0
+    ok, m_pad, bn_eff = _dot_layout(m * p, n_seg, bs, bn)
+    return ok, n_seg, m_pad, bn_eff
+
+
+def _block_basis_2d(bc: F.BlockCompressed, p: int, n_seg: int):
+    """Flat (m, nb, bs) codes -> (m*p, n_seg) element codes + exps."""
+    m = bc.codes.shape[0]
+    spec = bc.spec
+    codes = bc.codes.reshape(m * p, n_seg)
+    exps = bc.exps.reshape(m * p, n_seg // spec.bs)
+    return codes, exps
+
+
+def block_dots(bc: F.BlockCompressed, W: jax.Array, *, p: int,
+               bn: int = 2048, interpret: bool | None = None):
+    """``H (m, p, q) = einsum('ian,bn->iab', decompress(V), W)`` fused.
+
+    ``bc`` holds ``m`` flattened block rows of ``p`` segment-aligned
+    per-RHS segments; ``W (q, n_log)`` with ``n_log <= n_seg`` is
+    zero-padded to the segment length (pad columns of the store decode to
+    exact zeros, so the contraction is unaffected).  Returns ``None`` off
+    the kernel path — the caller owns the jnp fallback.
+    """
+    spec = bc.spec
+    if not kernel_supported(spec):
+        return None
+    m, nb, bs = bc.codes.shape
+    ok, n_seg, m_pad, bn_eff = _block_layout(m, p, nb * bs, spec.bs, bn)
+    if not ok:
+        return None
+    if interpret is None:
+        interpret = _default_interpret()
+    codes, exps = _block_basis_2d(bc, p, n_seg)
+    q, n_log = W.shape
+    X = W.astype(spec.dtype).T
+    if n_log != n_seg:
+        X = jnp.pad(X, ((0, n_seg - n_log), (0, 0)))
+    codes = _pad_rows_to(codes, m_pad)
+    exps = _pad_rows_to(exps, m_pad)
+    Y = KB.block_dots_2d(codes, exps, X, spec, bm=8, bn=bn_eff,
+                         interpret=interpret)
+    return Y[: m * p].reshape(m, p, q)
+
+
+def block_combine(bc: F.BlockCompressed, Y: jax.Array, *, p: int,
+                  bn: int = 2048, interpret: bool | None = None):
+    """``out (q, n_seg) = einsum('iab,ian->bn', Y, decompress(V))`` fused.
+
+    ``Y (m, p, q)`` are the block couplings; the caller trims the result's
+    segment padding back to the logical vector length.  Returns ``None``
+    off the kernel path.
+    """
+    spec = bc.spec
+    if not kernel_supported(spec):
+        return None
+    m, nb, bs = bc.codes.shape
+    ok, n_seg, m_pad, bn_eff = _block_layout(m, p, nb * bs, spec.bs, bn)
+    if not ok:
+        return None
+    if interpret is None:
+        interpret = _default_interpret()
+    codes, exps = _block_basis_2d(bc, p, n_seg)
+    q = Y.shape[-1]
+    _, _, _, bm_eff = _reduce_layout(m * p, n_seg, spec.bs, bn)
+    h = Y.astype(spec.dtype).reshape(m * p, q).T
+    h = _pad_rows_to(h, m_pad, axis=1)
+    codes = _pad_rows_to(codes, m_pad)
+    exps = _pad_rows_to(exps, m_pad)
+    out = KB.block_combine_2d(codes, exps, h, spec, bm=bm_eff, bn=bn_eff,
+                              interpret=interpret)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ELL SpMV (optionally consuming an FRSZ2-compressed operand)
+# ---------------------------------------------------------------------------
+
+
+def spmv_use_kernel() -> bool:
+    """ELL SpMV kernel dispatch default: compiled accelerator backends only.
+
+    Unlike the basis contractions (where interpret mode is the CPU
+    correctness path and the jnp route is equivalent traffic), the jnp
+    gather SpMV is already the right CPU implementation — the Pallas
+    kernel only wins where it compiles.  ``REPRO_INTERPRET``/``INTERPRET``
+    force-interpret pins therefore also force the jnp route here.
+    """
+    if INTERPRET is not None:
+        return not INTERPRET
+    env = os.environ.get("REPRO_INTERPRET", "").strip().lower()
+    if env in _TRUTHY:
+        return False
+    return jax.default_backend() in _ACCEL_BACKENDS
+
+
+@functools.lru_cache(maxsize=4096)
+def _ell_layout(nr: int):
+    """``(nr_pad, bm)`` row padding/tiling for the ELL SpMV grid."""
+    return _pick_block_rows(nr)
+
+
+def ell_spmv(vals: jax.Array, cols: jax.Array, x, *,
+             interpret: bool | None = None):
+    """``y (nr,) = ELL(vals, cols) @ x`` through the Pallas kernel.
+
+    ``x`` is a dense vector or an FRSZ2 :class:`~repro.core.frsz2.
+    BlockCompressed` operand (fused in-register decode — the
+    compressed-halo wire format feeds the matvec directly).  Returns
+    ``None`` off the kernel path; the caller owns the jnp fallback.
+    """
+    nr, w = vals.shape
+    nr_pad, bm = _ell_layout(nr)
+    if interpret is None:
+        interpret = _default_interpret()
+    vp = _pad_rows_to(vals, nr_pad)
+    cp = _pad_rows_to(cols, nr_pad)
+    if isinstance(x, F.BlockCompressed):
+        spec = x.spec
+        if not kernel_supported(spec):
+            return None
+        nb = x.codes.shape[-2]
+        n_pad = nb * spec.bs
+        if n_pad % LANES:
+            return None
+        xcodes = x.codes.reshape(1, n_pad)
+        xexps = x.exps.reshape(1, nb)
+        y = KE.ell_spmv_frsz2_2d(vp, cp, xcodes, xexps, spec, bm=bm,
+                                 interpret=interpret)
+    else:
+        y = KE.ell_spmv_2d(vp, cp, x[None, :].astype(vals.dtype), bm=bm,
+                           interpret=interpret)
+    return y[:nr, 0]
 
 
 # ---------------------------------------------------------------------------

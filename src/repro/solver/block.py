@@ -47,6 +47,19 @@ not p); each returned :class:`~repro.solver.gmres.GmresResult` carries
 its ``1/p`` share so summing over the batch reproduces the batch total —
 the same summation semantics as the vmap path, which is what
 ``benchmarks/block_gmres.py`` compares.
+
+The hot contractions (``block_dots``/``block_combine`` in the block
+orthogonalizers and the solution update) dispatch through the
+``StorageFormat`` protocol: FRSZ2 storage with ``use_kernels`` routes them
+through the fused decode-inside-contraction Pallas kernels
+(``repro.kernels.frsz2_block``), so the compressed block basis is expanded
+in-register per tile instead of materializing the decoded ``(m+1, p, n)``
+array in HBM each sweep (the jaxpr-level fusion proof lives in
+``tests/test_block_kernels.py``, built on :func:`build_block_solve`).
+``bytes_read`` is unchanged by the route — both read the same compressed
+rows — and the stage-3 traffic audit
+(``repro.analysis.traffic.run_local_traffic``) holds it to exact equality
+through the fused path.
 """
 from __future__ import annotations
 
